@@ -1,0 +1,168 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  fig1_optimality      — Fig 1/2: optimum vs ring-unwinding on the paper's
+                         switch topology (derived = speedup, expect 4x)
+  pipeline_convergence — §1.3: achieved/optimal ratio vs chunk count
+  zoo_optimality       — eq (1) + achieved ratio across the topology zoo
+  allreduce_rs_ag      — App. B: RS+AG vs RE+BC runtime factors
+  schedule_gen_scaling — §3: strongly-polynomial generation time vs size
+  jax_collectives      — wall-time of tree-pipeline vs XLA collectives on
+                         8 host devices (subprocess)
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from fractions import Fraction
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (allgather_inv_xstar, compile_allgather,
+                        compile_allreduce, re_bc_allreduce_runtime,
+                        rs_ag_allreduce_runtime, simulate_allgather,
+                        simulate_allreduce, solve_optimality)
+from repro.topo import (bidir_ring, dgx_box, dragonfly, fat_tree, fig1a,
+                        fig1d_ring_unwound, multipod_topology, ring,
+                        star_switch, torus_2d, two_cluster_switch)
+
+
+def row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, repeat=1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeat * 1e6
+
+
+# ---------------------------------------------------------------------- #
+
+def fig1_optimality() -> None:
+    """Paper Fig 1/2: edge splitting preserves the cluster cut; ring
+    unwinding loses 4x."""
+    g = fig1a()
+    opt, us = timed(solve_optimality, g)
+    ring_inv = allgather_inv_xstar(fig1d_ring_unwound())
+    row("fig1_optimality.ours", us, f"inv_x*={opt.inv_x_star}")
+    row("fig1_optimality.ring_unwound", us,
+        f"inv_x*={ring_inv};slowdown={ring_inv / opt.inv_x_star}x")
+
+
+def pipeline_convergence() -> None:
+    g = fig1a()
+    for p in (1, 2, 4, 8, 16, 32, 64, 128):
+        sched, us = timed(compile_allgather, g, num_chunks=p)
+        rep = simulate_allgather(sched)
+        row(f"pipeline_convergence.P{p}", us, f"ratio={float(rep.ratio):.4f}")
+
+
+def zoo_optimality() -> None:
+    zoo = [fig1a(), ring(8), bidir_ring(8), torus_2d(4, 4), fat_tree(),
+           dragonfly(), dgx_box(), star_switch(8),
+           multipod_topology(2, 4, 10, 1)]
+    for g in zoo:
+        sched, us = timed(compile_allgather, g, num_chunks=32)
+        rep = simulate_allgather(sched)
+        row(f"zoo_optimality.{g.name}", us,
+            f"inv_x*={sched.opt.inv_x_star};k={sched.opt.k};"
+            f"ratio={float(rep.ratio):.4f}")
+
+
+def allreduce_rs_ag() -> None:
+    for g in (fig1a(), ring(6), dragonfly(), dgx_box()):
+        (rs_ag, us) = timed(rs_ag_allreduce_runtime, g)
+        re_bc = re_bc_allreduce_runtime(g)
+        ar = compile_allreduce(g, num_chunks=32)
+        rep = simulate_allreduce(ar)
+        row(f"allreduce.{g.name}", us,
+            f"rs_ag={rs_ag};re_bc={re_bc};"
+            f"re_bc/rs_ag={float(re_bc / rs_ag):.2f};"
+            f"achieved_ratio={float(rep.ratio):.3f}")
+
+
+def schedule_gen_scaling() -> None:
+    """§3: runtime vs topology size (strongly polynomial — and capacity-
+    independent: scaling all bandwidths 100x must not change the time)."""
+    for n in (4, 8, 16, 24):
+        g = bidir_ring(n)
+        _, us = timed(compile_allgather, g, num_chunks=8)
+        row(f"schedule_gen.bidir_ring{n}", us, f"nodes={n}")
+    for n in (4, 8, 12):
+        g = two_cluster_switch(n // 2, 10, 1)
+        _, us = timed(compile_allgather, g, num_chunks=8)
+        row(f"schedule_gen.two_cluster{n}", us, f"nodes={n}+3sw")
+    g1 = two_cluster_switch(4, 10, 1)
+    g100 = two_cluster_switch(4, 1000, 100)
+    _, us1 = timed(compile_allgather, g1, num_chunks=8)
+    _, us100 = timed(compile_allgather, g100, num_chunks=8)
+    row("schedule_gen.capacity_independence", us100,
+        f"t(100x_bandwidth)/t(1x)={us100 / max(us1, 1):.2f}")
+
+
+def jax_collectives() -> None:
+    """Wall time of the executable tree-pipeline collectives vs XLA's
+    built-ins on 8 host CPU devices (latency-bound toy, but end-to-end)."""
+    code = textwrap.dedent("""
+        import time
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.topo import bidir_ring
+        from repro.core.schedule import compile_allgather, \\
+            compile_reduce_scatter
+        from repro.comms import compile_program, tree_all_reduce
+
+        mesh = Mesh(np.array(jax.devices()), ('x',))
+        topo = bidir_ring(8)
+        ag = compile_program(compile_allgather(topo, num_chunks=4))
+        rs = compile_program(compile_reduce_scatter(topo, num_chunks=4))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 1 << 16))
+
+        tree = jax.jit(shard_map(
+            lambda v: tree_all_reduce(v[0], rs, ag, 'x')[None],
+            mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+        xla = jax.jit(shard_map(
+            lambda v: jax.lax.psum(v[0], 'x')[None],
+            mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+        for name, fn in (('tree', tree), ('xla_psum', xla)):
+            fn(x).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(20):
+                out = fn(x)
+            out.block_until_ready()
+            us = (time.perf_counter() - t0) / 20 * 1e6
+            print(f'jax_collectives.allreduce_{name},{us:.1f},'
+                  f'bytes={x.nbytes}')
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    if out.returncode:
+        row("jax_collectives.FAILED", 0.0, out.stderr.strip()[-120:])
+    else:
+        print(out.stdout.strip(), flush=True)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig1_optimality()
+    pipeline_convergence()
+    zoo_optimality()
+    allreduce_rs_ag()
+    schedule_gen_scaling()
+    jax_collectives()
+
+
+if __name__ == "__main__":
+    main()

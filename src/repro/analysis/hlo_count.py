@@ -1,0 +1,319 @@
+"""Exact FLOP/byte counting from optimized HLO text, with while-loop trip
+multipliers.
+
+XLA's `compiled.cost_analysis()` counts each while-loop BODY once, so any
+`lax.scan` (our layer stacks, CE-loss chunks, microbatching) is undercounted
+by its trip count.  This module re-derives:
+
+* flops — every `dot` (2 × prod(output) × contracted size), recursing into
+  fusions / calls / while bodies, multiplying while bodies by their trip
+  count (parsed from the loop-condition computation's comparison constant).
+* bytes — per top-level op (= one kernel): operands + outputs, with the
+  same multipliers.  This is an upper-estimate of HBM traffic (XLA may keep
+  some buffers in registers/cache); it is consistent across variants, which
+  is what the perf loop needs.
+
+Validated against unrolled-vs-scanned matmul stacks (tests/test_analysis.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _split_header(stripped: str):
+    """'%name (a: T, b: (U, V)) -> R {' -> (name, [(a, T), (b, '(U, V)')])
+    with balanced-paren awareness; None if not a computation header."""
+    m = _COMP_NAME_RE.match(stripped)
+    if not m or not stripped.endswith("{") or "->" not in stripped:
+        return None
+    start = stripped.index("(", m.start(1))
+    depth = 0
+    end = -1
+    for i in range(start, len(stripped)):
+        if stripped[i] == "(":
+            depth += 1
+        elif stripped[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    if end < 0 or "->" not in stripped[end:]:
+        return None
+    inner = stripped[start + 1:end]
+    params = []
+    depth = 0
+    tok = ""
+    for ch in inner + ",":
+        if ch == "," and depth == 0:
+            if ":" in tok:
+                pname, ptype = tok.split(":", 1)
+                params.append((pname.strip().lstrip("%"), ptype.strip()))
+            tok = ""
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        tok += ch
+    return m.group(1), params
+# result type may be a tuple containing /*index=N*/ comments; tuples never
+# nest parens in HLO text, so [^()]* is safe
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^()]*\)|\S+))\s+([\w\-]+)\(")
+_ATTR_COMP_RE = re.compile(r"(?:calls|condition|body|to_apply)=%([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_ARGS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over all shapes in `text` (handles tuples)."""
+    elems = 0
+    bytes_ = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+def _shape_dims(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result: str               # result type text
+    kind: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]    # param name -> type text
+    ops: List[Op]
+    shapes: Dict[str, str]    # op/param name -> result type text
+    max_const: int = 1        # largest integer constant (trip-count probe)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            hdr = _split_header(stripped)
+            if hdr is not None:
+                cur = Computation(hdr[0], {}, [], {})
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                for pname, ptype in hdr[1]:
+                    cur.params[pname] = ptype
+                    cur.shapes[pname] = ptype
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(stripped)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), stripped)
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.result
+            if op.kind == "constant":
+                c = _CONST_RE.search(stripped)
+                if c:
+                    cur.max_const = max(cur.max_const, int(c.group(1)))
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out = _shape_dims(op.result)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contracted size from the lhs operand's shape
+    args = _ARGS_RE.findall(op.line.split("(", 1)[1])
+    contract = 1
+    cm = _CONTRACT_RE.search(op.line)
+    if args and cm is not None:
+        lhs_type = comp.shapes.get(args[0])
+        if lhs_type:
+            sd = _shape_dims(lhs_type)
+            if sd:
+                dims = sd[1]
+                for idx in (cm.group(1).split(",") if cm.group(1) else []):
+                    i = int(idx)
+                    if i < len(dims):
+                        contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(cond: Computation) -> int:
+    return max(cond.max_const, 1)
+
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))           # [num_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _collective_wire_bytes(kind: str, result_bytes: float, g: int) -> float:
+    """Per-device link bytes, ring-algorithm model, from the per-device
+    SPMD result buffer size."""
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-gather":          # result = gathered (full) buffer
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":      # result = scattered piece
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)        # collective-permute: one hop
+
+
+class _Cost:
+    __slots__ = ("flops", "bytes", "coll", "coll_ops")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = {k: 0.0 for k in _COLLECTIVE_KINDS}
+        self.coll_ops = {k: 0 for k in _COLLECTIVE_KINDS}
+
+    def add(self, other: "_Cost", mult: float = 1.0,
+            with_bytes: bool = True) -> None:
+        self.flops += mult * other.flops
+        if with_bytes:
+            self.bytes += mult * other.bytes
+        for k in _COLLECTIVE_KINDS:
+            self.coll[k] += mult * other.coll[k]
+            self.coll_ops[k] += int(mult * other.coll_ops[k])
+
+
+def count(text_or_comps, entry_name: Optional[str] = None
+          ) -> Dict[str, object]:
+    """Trip-adjusted {'flops','bytes','collective_bytes','collective_ops'}
+    for the entry computation."""
+    if isinstance(text_or_comps, str):
+        comps, entry = parse_hlo(text_or_comps)
+    else:
+        comps, entry = text_or_comps
+    entry = entry_name or entry
+    memo: Dict[str, _Cost] = {}
+
+    def visit(name: str) -> _Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return _Cost()
+        memo[name] = _Cost()             # cycle guard
+        cost = _Cost()
+        for op in comp.ops:
+            base_kind = op.kind[:-6] if op.kind.endswith("-start") \
+                else op.kind
+            if base_kind in _COLLECTIVE_KINDS and \
+                    not op.kind.endswith("-done"):
+                _, rb = _shape_elems_bytes(op.result)
+                g = _group_size(op.line)
+                cost.coll[base_kind] += _collective_wire_bytes(
+                    base_kind, rb, g)
+                cost.coll_ops[base_kind] += 1
+            if op.kind == "dot":
+                cost.flops += _dot_flops(op, comp)
+            if op.kind == "while":
+                refs = dict(re.findall(
+                    r"(condition|body)=%([\w\.\-]+)", op.line))
+                body_cost = visit(refs.get("body", ""))
+                cond = comps.get(refs.get("condition", ""))
+                trips = _trip_count(cond) if cond else 1
+                cost.add(body_cost, trips)
+                continue
+            if op.kind == "conditional":
+                bm = _BRANCHES_RE.search(op.line)
+                if bm:
+                    branches = [visit(b.strip().lstrip("%"))
+                                for b in bm.group(1).split(",")]
+                    if branches:
+                        best = max(branches, key=lambda c: c.flops)
+                        cost.add(best)
+                continue
+            for s in _ATTR_COMP_RE.findall(op.line):
+                # fusion internals' bytes are NOT HBM traffic; count only
+                # their flops (and collectives, which can't fuse anyway)
+                cost.add(visit(s), with_bytes=(op.kind != "fusion"))
+            # kernel-level bytes: output + TOUCHED operand bytes
+            if op.kind in ("constant", "parameter", "get-tuple-element",
+                           "tuple", "bitcast", "copy-start", "copy-done"):
+                continue
+            _, ob = _shape_elems_bytes(op.result)
+            if op.kind in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region (≈ output size)
+                cost.bytes += 2 * ob
+                continue
+            if op.kind in ("dynamic-update-slice", "scatter"):
+                # in-place: writes only the update region (2nd operand)
+                argtext = op.line.split("(", 1)[1]
+                args = _ARGS_RE.findall(argtext)
+                upd = 0
+                if len(args) >= 2:
+                    t = comp.shapes.get(args[1])
+                    if t:
+                        _, upd = _shape_elems_bytes(t)
+                cost.bytes += 2 * upd
+                continue
+            cost.bytes += ob
+            argtext = op.line.split("(", 1)[1]
+            for a in _ARGS_RE.findall(argtext):
+                t = comp.shapes.get(a)
+                if t:
+                    _, ab = _shape_elems_bytes(t)
+                    cost.bytes += ab
+        memo[name] = cost
+        return cost
+
+    c = visit(entry)
+    return {"flops": c.flops, "bytes": c.bytes,
+            "collective_bytes": {k: int(v) for k, v in c.coll.items()},
+            "collective_ops": dict(c.coll_ops)}

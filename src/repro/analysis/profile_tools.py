@@ -1,0 +1,63 @@
+"""Per-op cost attribution for the perf loop: where do the bytes/collective
+bytes of a compiled cell actually go?"""
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+from . import hlo_count as hc
+
+
+def top_contributors(hlo: str, n: int = 12, kind_filter=None
+                     ) -> List[Tuple[float, float, str, str]]:
+    """[(bytes, mult, kind, line)] sorted desc, trip-adjusted."""
+    comps, entry = hc.parse_hlo(hlo)
+    out = []
+
+    def visit(name, mult=1.0):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.kind == "while":
+                refs = dict(re.findall(
+                    r"(condition|body)=%([\w\.\-]+)", op.line))
+                cond = comps.get(refs.get("condition", ""))
+                visit(refs.get("body", ""),
+                      mult * (hc._trip_count(cond) if cond else 1))
+                continue
+            kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if kind in hc._COLLECTIVE_KINDS and not op.kind.endswith("-done"):
+                _, rb = hc._shape_elems_bytes(op.result)
+                wb = hc._collective_wire_bytes(
+                    kind, rb, hc._group_size(op.line))
+                out.append((wb * mult, mult, "COLL:" + kind, op.line[:130]))
+            if op.kind in ("constant", "parameter", "get-tuple-element",
+                           "tuple", "bitcast", "while", "conditional",
+                           "copy-start", "copy-done"):
+                continue
+            _, ob = hc._shape_elems_bytes(op.result)
+            if op.kind in ("dynamic-slice", "slice", "gather"):
+                out.append((2 * ob * mult, mult, op.kind, op.line[:130]))
+                continue
+            if op.kind in ("dynamic-update-slice", "scatter"):
+                args = hc._ARGS_RE.findall(op.line.split("(", 1)[1])
+                upd = 0
+                if len(args) >= 2:
+                    t = comp.shapes.get(args[1])
+                    if t:
+                        _, upd = hc._shape_elems_bytes(t)
+                out.append((2 * upd * mult, mult, op.kind, op.line[:130]))
+                continue
+            tot = ob
+            for a in hc._ARGS_RE.findall(op.line.split("(", 1)[1]):
+                t = comp.shapes.get(a)
+                if t:
+                    tot += hc._shape_elems_bytes(t)[1]
+            out.append((tot * mult, mult, op.kind, op.line[:130]))
+
+    visit(entry)
+    if kind_filter:
+        out = [o for o in out if kind_filter in o[2]]
+    out.sort(reverse=True)
+    return out[:n]

@@ -1,0 +1,98 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.analysis.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(dirname: str) -> List[dict]:
+    out = []
+    for fn in sorted(os.listdir(dirname)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dirname, fn)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:9.1f}"
+
+
+def table(records: List[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | mem/dev GiB | compute ms | memory ms | "
+        "collective ms | dominant | useful-FLOPs | roofline-frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    skips = []
+    for r in records:
+        if r["mesh"] != mesh:
+            continue
+        if r.get("skip"):
+            skips.append(f"| {r['arch']} | {r['shape']} | — skipped: "
+                         f"{r['skip']} |")
+            continue
+        if not r["ok"]:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["total_per_device"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mem:.2f} "
+            f"| {fmt_ms(rf['compute_s'])} | {fmt_ms(rf['memory_s'])} "
+            f"| {fmt_ms(rf['collective_s'])} | {rf['dominant']} "
+            f"| {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} |")
+    return "\n".join(lines + [""] + skips)
+
+
+def summary(records: List[dict]) -> Dict[str, int]:
+    ok = sum(1 for r in records if r["ok"] and not r.get("skip"))
+    skip = sum(1 for r in records if r.get("skip"))
+    fail = sum(1 for r in records if not r["ok"])
+    return {"ok": ok, "skip": skip, "fail": fail}
+
+
+def worst_cells(records: List[dict], mesh: str = "16x16", n: int = 5):
+    rows = [r for r in records
+            if r["mesh"] == mesh and r["ok"] and not r.get("skip")
+            and r["roofline"]["compute_s"] > 1e-5]
+    rows.sort(key=lambda r: r["roofline"]["roofline_fraction"])
+    return rows[:n]
+
+
+def most_collective_bound(records: List[dict], mesh: str = "16x16", n: int = 5):
+    rows = [r for r in records
+            if r["mesh"] == mesh and r["ok"] and not r.get("skip")]
+    rows.sort(key=lambda r: -(r["roofline"]["collective_s"]
+                              / max(r["roofline"]["compute_s"], 1e-9)))
+    return rows[:n]
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    records = load(d)
+    print(f"records: {summary(records)}\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"## mesh {mesh}\n")
+        print(table(records, mesh))
+        print()
+    print("### worst roofline fraction (single-pod)")
+    for r in worst_cells(records):
+        rf = r["roofline"]
+        print(f"  {r['arch']}/{r['shape']}: frac={rf['roofline_fraction']:.3f}"
+              f" dominant={rf['dominant']}")
+    print("### most collective-bound (single-pod)")
+    for r in most_collective_bound(records):
+        rf = r["roofline"]
+        print(f"  {r['arch']}/{r['shape']}: collective/compute="
+              f"{rf['collective_s'] / max(rf['compute_s'], 1e-9):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = Σ per-kind collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from `compiled.cost_analysis()` (per-device SPMD
+module → multiply by chip count for totals; we keep per-device and divide by
+per-chip peak, which is equivalent).  Collective bytes are NOT in
+cost_analysis: we parse the HLO text and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+The collective term charges bytes to the slowest link they traverse: ICI
+(~50 GB/s/link) for intra-pod axes; DCN for the 'pod' axis (identified via
+replica-group stride analysis when possible, else worst-cased as ICI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.topo.tpu import TPU_V5E, HardwareSpec
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+# e.g.  bf16[8,128,256]{2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(?P<result>\([^=]*?\)|\S+)\s+"          # result shape (or tuple)
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)"
+    r"(?P<async>-start|-done)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))           # [num_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    """Per-device link bytes for one collective, ring-algorithm model.
+    `result_bytes` is the per-device RESULT buffer size from the SPMD HLO."""
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-gather":          # result = gathered (full) buffer
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":      # result = scattered piece
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)        # collective-permute: one hop
+
+
+def _iter_collectives(hlo_text: str):
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group("async") == "-done":
+            continue  # -done pairs with -start; count once
+        shapes = _SHAPE_RE.findall(m.group("result"))
+        result_bytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        yield m.group("kind"), result_bytes, _group_size(line)
+
+
+def collective_bytes_by_kind(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes per collective kind, from the SPMD HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    for kind, result_bytes, g in _iter_collectives(hlo_text):
+        out[kind] += int(_wire_bytes(kind, result_bytes, g))
+    return out
+
+
+def collective_op_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    for kind, _, _ in _iter_collectives(hlo_text):
+        out[kind] += 1
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                # per-device
+    hlo_bytes: float                # per-device HBM traffic
+    collective_bytes: Dict[str, int]  # per-device, by kind
+    model_flops: float              # 6·N·D (or 6·N_active·D) total
+    hw: HardwareSpec = TPU_V5E
+    ici_links_per_axis: int = 2     # bidirectional ring: 2 egress links/chip
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / self.hw.peak_flops_bf16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / self.hw.hbm_bw
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    @property
+    def collective_s(self) -> float:
+        # per-device collective bytes over per-device ICI egress bandwidth
+        bw = self.hw.ici_link_bw * self.ici_links_per_axis
+        return self.total_collective_bytes / bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): compiled-compute efficiency —
+        catches remat recompute and masked-attention waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_s / max(all terms): 1.0 = perfectly compute-bound."""
+        return self.compute_s / self.bound_s if self.bound_s else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_bytes": dict(self.collective_bytes),
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training (D = tokens per step); 2·N·D for a
+    forward-only step (prefill); decode: 2·N_active per token × batch."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,5 @@
+from .executor import PermuteCall, PermuteProgram, compile_program  # noqa: F401
+from .collectives import (tree_all_gather, tree_reduce_scatter,  # noqa: F401
+                          tree_all_reduce)
+from .mesh_axes import CollectiveContext, AxisSchedules  # noqa: F401
+from .overlap import BucketedAllReduce, compressed_all_reduce  # noqa: F401

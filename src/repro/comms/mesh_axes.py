@@ -1,0 +1,90 @@
+"""Per-mesh-axis schedule compilation and caching.
+
+Production collectives on a TPU mesh decompose axis-wise (an allreduce over
+('pod','data') = hierarchical RS/AG per axis).  Each axis has a *physical*
+topology model (torus ring for ICI axes, switch star / pipe for the DCN
+'pod' axis) and gets its own bandwidth-optimal schedule from the paper's
+compiler.  Programs are cached per (axis, kind, P).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.graph import DiGraph
+from repro.core.schedule import (compile_allgather, compile_reduce_scatter,
+                                 PipelineSchedule)
+from repro.topo.tpu import axis_topology_for_mesh
+from .executor import PermuteProgram, compile_program
+
+
+@dataclasses.dataclass
+class AxisSchedules:
+    axis_name: str
+    topology: DiGraph
+    ag_sched: PipelineSchedule
+    rs_sched: PipelineSchedule
+    ag_prog: PermuteProgram
+    rs_prog: PermuteProgram
+
+
+class CollectiveContext:
+    """Holds compiled tree-pipeline programs for every axis of a mesh.
+
+    mesh_axes: {axis_name: size}.  Topologies default to the TPU model
+    (`axis_topology_for_mesh`) but can be overridden per axis — this is the
+    knob the perf loop turns (ring vs torus-line vs custom DCN model).
+    """
+
+    def __init__(self, mesh_axes: Dict[str, int], num_chunks: int = 8,
+                 topologies: Optional[Dict[str, DiGraph]] = None,
+                 fixed_k: Optional[int] = None):
+        self.mesh_axes = dict(mesh_axes)
+        self.num_chunks = num_chunks
+        self.fixed_k = fixed_k
+        self._topologies = dict(topologies or {})
+        self._cache: Dict[str, AxisSchedules] = {}
+
+    def topology(self, axis: str) -> DiGraph:
+        if axis not in self._topologies:
+            self._topologies[axis] = axis_topology_for_mesh(
+                axis, self.mesh_axes[axis])
+        return self._topologies[axis]
+
+    def axis(self, axis: str) -> AxisSchedules:
+        if axis not in self._cache:
+            topo = self.topology(axis)
+            ag = compile_allgather(topo, num_chunks=self.num_chunks,
+                                   fixed_k=self.fixed_k)
+            rs = compile_reduce_scatter(topo, num_chunks=self.num_chunks,
+                                        fixed_k=self.fixed_k)
+            self._cache[axis] = AxisSchedules(
+                axis_name=axis, topology=topo,
+                ag_sched=ag, rs_sched=rs,
+                ag_prog=compile_program(ag), rs_prog=compile_program(rs))
+        return self._cache[axis]
+
+    def allreduce_programs(self, axes: Sequence[str]
+                           ) -> Tuple[Tuple[str, PermuteProgram,
+                                            PermuteProgram], ...]:
+        """(axis, rs_prog, ag_prog) tuples for tree_all_reduce_multi,
+        ordered with the largest (cheapest-per-byte) axis first so the
+        skinny DCN axis reduces the least data."""
+        order = sorted((a for a in axes if self.mesh_axes[a] > 1),
+                       key=lambda a: -self.mesh_axes[a])
+        return tuple((a, self.axis(a).rs_prog, self.axis(a).ag_prog)
+                     for a in order)
+
+    def describe(self) -> str:
+        lines = [f"CollectiveContext P={self.num_chunks}"]
+        for a, size in self.mesh_axes.items():
+            if size == 1:
+                lines.append(f"  axis {a}: trivial (size 1)")
+                continue
+            ax = self.axis(a)
+            lines.append(
+                f"  axis {a}: {ax.topology.name} "
+                f"1/x*={ax.ag_sched.opt.inv_x_star} k={ax.ag_sched.k} "
+                f"AG {ax.ag_prog.describe()} RS {ax.rs_prog.describe()}")
+        return "\n".join(lines)

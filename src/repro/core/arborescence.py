@@ -1,0 +1,211 @@
+"""§2.3 Spanning-tree packing (Algorithm 2, Bérczi–Frank / Schrijver).
+
+Packs k edge-disjoint spanning out-trees rooted at *every* compute node into
+the direct-connect graph D* = (Vc, E*) produced by edge splitting.  Identical
+trees are kept aggregated as a `TreeClass` with multiplicity m(R) — the
+algorithm's runtime is independent of k (strongly polynomial).
+
+The step size µ for adding edge (x,y) to a class is computed with a single
+maxflow in the auxiliary network D̄ of Theorem 12:
+
+    µ = min{ g(x,y), m(R1), F(x,y; D̄) − Σ_{i≠1} m(R_i) }       (eq. 4)
+
+Classes that already span Vc can never violate condition (3) (R_i ⊆ S is
+impossible for S ⊊ Vc), so they are dropped from the gadget — this keeps D̄
+small and is exactly equivalent (their gadget path contributes F and Σ terms
+that cancel).
+
+Candidate edges are scanned in (depth-of-tail, head-id) order, which grows
+BFS-like trees: minimum-height packing is NP-complete (paper §2.3), but
+shallow trees reduce pipeline fill latency, so the heuristic matters in
+practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .graph import DiGraph, Edge
+from .maxflow import FlowNetwork
+
+
+class PackingError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TreeClass:
+    """m identical partial out-trees rooted at `root`."""
+    root: int
+    mult: int
+    verts: List[int]               # vertices in addition order (root first)
+    edges: List[Edge]              # tree edges in addition order
+    vset: set = dataclasses.field(default_factory=set)
+
+    def __post_init__(self) -> None:
+        self.vset = set(self.verts)
+
+    def depth_of(self, v: int) -> int:
+        """Depth of v in the tree (root = 0)."""
+        depth = {self.root: 0}
+        for (a, b) in self.edges:
+            depth[b] = depth[a] + 1
+        return depth[v]
+
+    def parent_map(self) -> Dict[int, int]:
+        return {b: a for (a, b) in self.edges}
+
+    def children_map(self) -> Dict[int, List[int]]:
+        ch: Dict[int, List[int]] = {}
+        for (a, b) in self.edges:
+            ch.setdefault(a, []).append(b)
+        return ch
+
+
+def pack_arborescences(dstar: DiGraph, k: int) -> List[TreeClass]:
+    """Algorithm 2.  Returns classes with Σ_{classes of u} mult == k for every
+    compute node u, edge-disjoint w.r.t. dstar's capacities."""
+    demands = {u: k for u in sorted(dstar.compute)}
+    classes = pack_rooted_trees(dstar, demands)
+    verify_packing(dstar, k, classes)
+    return classes
+
+
+def pack_rooted_trees(dstar: DiGraph,
+                      demands: Dict[int, int]) -> List[TreeClass]:
+    """Generalised Algorithm 2: pack `demands[u]` spanning out-trees rooted
+    at each u (allgather: k per compute node; broadcast: λ at one root)."""
+    for w in dstar.switches:
+        # isolated switches (left over from edge splitting) are fine
+        if any(w in e for e in dstar.cap):
+            raise ValueError(
+                f"pack expects a compute-only graph; switch {w} "
+                f"still has incident edges")
+    nodes = sorted(dstar.compute)
+    n = len(nodes)
+    if n == 1:
+        (u, k), = demands.items()
+        return [TreeClass(root=u, mult=k, verts=[u], edges=[])]
+
+    g: Dict[Edge, int] = dict(dstar.cap)          # residual edge capacities
+    classes: List[TreeClass] = [
+        TreeClass(root=u, mult=m, verts=[u], edges=[])
+        for u, m in sorted(demands.items()) if m > 0]
+    # grow classes to completion one at a time; splits enqueue copies
+    queue: List[int] = list(range(len(classes)))
+    all_v = set(nodes)
+
+    qi = 0
+    while qi < len(queue):
+        ci = queue[qi]
+        cur = classes[ci]
+        while cur.vset != all_v:
+            picked = False
+            # candidate edges: BFS-like order (oldest tail vertex first)
+            for x in cur.verts:
+                for y in sorted(dstar.compute):
+                    e = (x, y)
+                    if y in cur.vset or g.get(e, 0) <= 0:
+                        continue
+                    mu = _mu(dstar, g, classes, ci, e)
+                    if mu <= 0:
+                        continue
+                    if mu < cur.mult:
+                        # split: a copy keeps the old shape with the rest
+                        rest = TreeClass(root=cur.root, mult=cur.mult - mu,
+                                         verts=list(cur.verts),
+                                         edges=list(cur.edges))
+                        classes.append(rest)
+                        queue.append(len(classes) - 1)
+                        cur.mult = mu
+                    cur.edges.append(e)
+                    cur.verts.append(y)
+                    cur.vset.add(y)
+                    g[e] -= cur.mult
+                    picked = True
+                    break
+                if picked:
+                    break
+            if not picked:
+                raise PackingError(
+                    f"no augmenting edge for root {cur.root} with "
+                    f"verts={sorted(cur.vset)} — packing condition violated")
+        qi += 1
+
+    return classes
+
+
+def _mu(dstar: DiGraph, g: Dict[Edge, int], classes: Sequence[TreeClass],
+        ci: int, e: Edge) -> int:
+    """Theorem 12: µ for adding edge e=(x,y) to classes[ci]."""
+    x, y = e
+    cur = classes[ci]
+    want = min(g[e], cur.mult)
+    # gadget: one node s_i per other *incomplete* class
+    others = [c for j, c in enumerate(classes)
+              if j != ci and c.mult > 0 and len(c.vset) < dstar.num_compute]
+    sum_m = sum(c.mult for c in others)
+    inf = sum_m + sum(g.values()) + want + 1
+    net = FlowNetwork(dstar.num_nodes + len(others))
+    for (a, b), c in g.items():
+        if c > 0:
+            net.add_edge(a, b, c)
+    for j, c in enumerate(others):
+        sid = dstar.num_nodes + j
+        net.add_edge(x, sid, c.mult)
+        for v in c.verts:
+            net.add_edge(sid, v, inf)
+    limit = sum_m + want
+    f = net.maxflow(x, y, limit=limit)
+    return min(want, f - sum_m)
+
+
+# ---------------------------------------------------------------------- #
+# Verification (used by tests and by the schedule builder in verify mode)
+# ---------------------------------------------------------------------- #
+
+def verify_packing(dstar: DiGraph, k: int,
+                   classes: Sequence[TreeClass]) -> None:
+    """Assert the Algorithm-2 output contract:
+    * every class is a spanning out-tree rooted at its root;
+    * per root, multiplicities sum to k;
+    * edge-disjoint: per edge, Σ mult of classes using it <= capacity."""
+    nodes = sorted(dstar.compute)
+    per_root: Dict[int, int] = {u: 0 for u in nodes}
+    load: Dict[Edge, int] = {}
+    for c in classes:
+        if c.mult <= 0:
+            raise PackingError(f"class with non-positive multiplicity {c.mult}")
+        per_root[c.root] += c.mult
+        if set(c.verts) != set(nodes):
+            raise PackingError(f"root {c.root}: tree does not span Vc")
+        if len(c.edges) != len(nodes) - 1:
+            raise PackingError(f"root {c.root}: {len(c.edges)} edges != N-1")
+        indeg: Dict[int, int] = {}
+        reach = {c.root}
+        for (a, b) in c.edges:          # edges are in addition order
+            indeg[b] = indeg.get(b, 0) + 1
+            if a not in reach:
+                raise PackingError(f"root {c.root}: edge {(a,b)} detached")
+            reach.add(b)
+        if any(d != 1 for d in indeg.values()) or c.root in indeg:
+            raise PackingError(f"root {c.root}: not an out-tree")
+        for e in c.edges:
+            load[e] = load.get(e, 0) + c.mult
+    for u, total in per_root.items():
+        if total != k:
+            raise PackingError(f"root {u}: multiplicities sum to {total} != k={k}")
+    for e, used in load.items():
+        if used > dstar.cap.get(e, 0):
+            raise PackingError(
+                f"edge {e}: load {used} exceeds capacity {dstar.cap.get(e, 0)}")
+
+
+def max_tree_depth(classes: Sequence[TreeClass]) -> int:
+    depth = 0
+    for c in classes:
+        d: Dict[int, int] = {c.root: 0}
+        for (a, b) in c.edges:
+            d[b] = d[a] + 1
+        depth = max(depth, max(d.values(), default=0))
+    return depth

@@ -1,0 +1,288 @@
+"""§2.2 Edge splitting (Algorithm 1) — remove switch nodes losslessly.
+
+Repeatedly replaces a unit of capacity on ``(u, w), (w, t)`` (w a switch) by
+a unit on the direct logical edge ``(u, t)`` while preserving
+
+    min_{v∈Vc} F(s, v; D_k)  >=  |Vc| * k                      (Theorem 7)
+
+Theorem 8 gives the *maximum* capacity M splittable in one shot via 2|Vc|
+maxflows, which makes Algorithm 1 strongly polynomial (capacity-independent).
+
+We also keep the paper's `routing` table: ``routing[(u,t)][w] = M`` records
+that M units of the logical edge (u,t) physically traverse switch w.  After
+tree construction, `expand_paths` recovers the concrete switch paths, which
+the simulator uses to re-validate optimality on the *original* graph G.
+
+Degenerate pairs (u == t) occur when surplus switch capacity must simply be
+discarded (the split would create a self-loop).  Theorem 8's formula does not
+cover that case, so we fall back to a direct monotone binary search on the
+Theorem-5 oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .graph import DiGraph, Edge, validate_eulerian
+from .maxflow import FlowNetwork
+
+PairPriority = Callable[[int, int, int], object]  # (u, w, t) -> sort key
+
+
+@dataclasses.dataclass
+class SplitResult:
+    graph: DiGraph                       # D*: compute-only logical topology
+    routing: Dict[Edge, Dict[int, int]]  # (u,t) -> {switch w: capacity via w}
+    original: DiGraph                    # the input (scaled) switch topology
+    k: int
+
+
+class EdgeSplitError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------- #
+# Theorem 8: maximum splittable capacity for a concrete (e, f) pair
+# ---------------------------------------------------------------------- #
+
+def _flow_net(d: DiGraph, k: int, inf: int,
+              extra: Sequence[Tuple[int, int, int]]) -> Tuple[FlowNetwork, int]:
+    """D_k plus arbitrary extra edges; returns (net, source_node_id)."""
+    net = FlowNetwork(d.num_nodes + 1)
+    s = d.num_nodes
+    for (a, b), c in d.cap.items():
+        net.add_edge(a, b, c)
+    for u in sorted(d.compute):
+        net.add_edge(s, u, k)
+    for (a, b, c) in extra:
+        net.add_edge(a, b, c)
+    return net, s
+
+
+def max_split_capacity(d: DiGraph, k: int, u: int, w: int, t: int) -> int:
+    """Theorem 8 / eq. (2): max M such that splitting (u,w),(w,t) by M keeps
+    min_v F(s, v; D^ef_k) >= |Vc| k.  Requires u != t."""
+    assert u != t, "degenerate pair handled by max_discard_capacity"
+    c_uw = d.cap.get((u, w), 0)
+    c_wt = d.cap.get((w, t), 0)
+    bound = min(c_uw, c_wt)
+    if bound == 0:
+        return 0
+    nk = d.num_compute * k
+    inf = sum(d.cap.values()) + nk + bound + 1
+    limit = nk + bound  # flows above this are non-binding
+
+    best = bound
+    # term 3: min_v F(u, w; D̂_(u,w),v) - |Vc|k   with ∞ edges (u,s),(u,t),(v,w)
+    for v in sorted(d.compute):
+        if v == u:
+            continue  # ∞ edge (v,w)=(u,w) makes F infinite — non-binding
+        s_id = d.num_nodes
+        net, _ = _flow_net(d, k, inf,
+                           [(u, s_id, inf), (u, t, inf), (v, w, inf)])
+        f = net.maxflow(u, w, limit=limit)
+        best = min(best, f - nk)
+        if best <= 0:
+            return 0
+        limit = min(limit, nk + best)
+    # term 4: min_v F(w, t; D̂_(w,t),v) - |Vc|k   with ∞ edges (w,s),(u,t),(v,t)
+    for v in sorted(d.compute):
+        s_id = d.num_nodes
+        extra = [(w, s_id, inf), (u, t, inf)]
+        if v != t:
+            extra.append((v, t, inf))
+        net, _ = _flow_net(d, k, inf, extra)
+        f = net.maxflow(w, t, limit=limit)
+        best = min(best, f - nk)
+        if best <= 0:
+            return 0
+        limit = min(limit, nk + best)
+    return best
+
+
+def _oracle_holds(d: DiGraph, k: int) -> bool:
+    """min_v F(s, v; D_k) >= |Vc| k (Theorem 5 condition)."""
+    nk = d.num_compute * k
+    for v in sorted(d.compute):
+        net, s = _flow_net(d, k, 0, [])
+        if net.maxflow(s, v, limit=nk) < nk:
+            return False
+    return True
+
+
+def max_discard_capacity(d: DiGraph, k: int, u: int, w: int) -> int:
+    """Degenerate split (u,w),(w,u): capacity is simply discarded.  Find the
+    max M keeping the Theorem-5 oracle true, by monotone binary search."""
+    bound = min(d.cap.get((u, w), 0), d.cap.get((w, u), 0))
+    if bound == 0:
+        return 0
+
+    def ok(m: int) -> bool:
+        trial = dict(d.cap)
+        for e in ((u, w), (w, u)):
+            trial[e] -= m
+            if trial[e] == 0:
+                del trial[e]
+        return _oracle_holds(DiGraph(d.num_nodes, d.compute, trial, d.name), k)
+
+    lo_ok, hi = 0, bound
+    if ok(bound):
+        return bound
+    while hi - lo_ok > 1:
+        mid = (lo_ok + hi) // 2
+        if ok(mid):
+            lo_ok = mid
+        else:
+            hi = mid
+    return lo_ok
+
+
+# ---------------------------------------------------------------------- #
+# Algorithm 1
+# ---------------------------------------------------------------------- #
+
+def remove_switches(d: DiGraph, k: int,
+                    pair_priority: Optional[PairPriority] = None,
+                    verify: bool = False) -> SplitResult:
+    """Algorithm 1: split off all switch nodes of `d` (capacities already
+    scaled to G({U b_e})), preserving the Theorem-5 tree-packing condition.
+
+    pair_priority(u, w, t) orders ingress candidates per egress edge — the
+    paper uses this hook (§2.2 example) to e.g. prefer cross-cluster pairs.
+    """
+    validate_eulerian(d)
+    original = d.copy()
+    d = d.copy()
+    routing: Dict[Edge, Dict[int, int]] = {}
+
+    def apply_split(u: int, w: int, t: int, m: int) -> None:
+        for e in ((u, w), (w, t)):
+            d.cap[e] -= m
+            if d.cap[e] == 0:
+                del d.cap[e]
+        if u != t:
+            d.cap[(u, t)] = d.cap.get((u, t), 0) + m
+            routing.setdefault((u, t), {})
+            routing[(u, t)][w] = routing[(u, t)].get(w, 0) + m
+
+    for w in sorted(d.switches):
+        # saturate every egress edge of w in turn
+        guard = 0
+        while True:
+            egress = sorted(t for (a, t) in d.cap if a == w)
+            if not egress:
+                break
+            guard += 1
+            if guard > 4 * (d.num_nodes ** 2 + len(d.cap) + 4):
+                raise EdgeSplitError(f"no progress isolating switch {w}")
+            progress = False
+            for t in egress:
+                if d.cap.get((w, t), 0) == 0:
+                    continue
+                ins = [a for (a, b) in d.cap if b == w and a != t]
+                if pair_priority is not None:
+                    ins.sort(key=lambda u: pair_priority(u, w, t))
+                else:
+                    ins.sort()
+                for u in ins:
+                    if d.cap.get((w, t), 0) == 0:
+                        break
+                    m = max_split_capacity(d, k, u, w, t)
+                    if m > 0:
+                        apply_split(u, w, t, m)
+                        progress = True
+                # degenerate leftover: (t,w),(w,t) must be discarded
+                if d.cap.get((w, t), 0) > 0 and d.cap.get((t, w), 0) > 0:
+                    m = max_discard_capacity(d, k, t, w)
+                    if m > 0:
+                        apply_split(t, w, t, m)
+                        progress = True
+            if not progress:
+                raise EdgeSplitError(
+                    f"stuck isolating switch {w}: residual "
+                    f"{{e: c for e, c in d.cap.items() if w in e}}")
+        # w should now be isolated
+        residual = [(e, c) for e, c in d.cap.items() if w in e]
+        if residual:
+            raise EdgeSplitError(f"switch {w} not isolated: {residual}")
+
+    star = DiGraph(d.num_nodes, d.compute, d.cap, original.name + "*")
+    if verify:
+        validate_eulerian(star)
+        if not _oracle_holds(star, k):
+            raise EdgeSplitError("edge splitting broke the Theorem-5 oracle")
+    return SplitResult(graph=star, routing=routing, original=original, k=k)
+
+
+# ---------------------------------------------------------------------- #
+# Path recovery: logical (u,t) capacity -> physical switch paths in G
+# ---------------------------------------------------------------------- #
+
+Path = Tuple[int, ...]
+
+
+def expand_paths(res: SplitResult) -> Dict[Edge, List[Tuple[Path, int]]]:
+    """Decompose every logical edge of D* into physical paths of G with
+    integer capacities (a valid flow decomposition; conservation is exact)."""
+    phys_pool: Dict[Edge, int] = dict(res.original.cap)
+    via_pool: Dict[Edge, Dict[int, int]] = {
+        e: dict(ws) for e, ws in res.routing.items()}
+
+    def expand(a: int, b: int, amount: int) -> List[Tuple[Path, int]]:
+        out: List[Tuple[Path, int]] = []
+        take = min(amount, phys_pool.get((a, b), 0))
+        if take:
+            phys_pool[(a, b)] -= take
+            out.append(((a, b), take))
+            amount -= take
+        for w in sorted(via_pool.get((a, b), {})):
+            if amount == 0:
+                break
+            avail = via_pool[(a, b)][w]
+            m = min(amount, avail)
+            if m == 0:
+                continue
+            via_pool[(a, b)][w] -= m
+            left = expand(a, w, m)
+            right = expand(w, b, m)
+            out.extend(_join(left, right))
+            amount -= m
+        if amount != 0:
+            raise EdgeSplitError(
+                f"path expansion under-supplied for ({a},{b}): short {amount}")
+        return out
+
+    result: Dict[Edge, List[Tuple[Path, int]]] = {}
+    for (u, t), c in sorted(res.graph.cap.items()):
+        result[(u, t)] = expand(u, t, c)
+    return result
+
+
+def _join(left: List[Tuple[Path, int]],
+          right: List[Tuple[Path, int]]) -> List[Tuple[Path, int]]:
+    """Splice a->..->w path pieces with w->..->b pieces, capacity-matched."""
+    out: List[Tuple[Path, int]] = []
+    li = ri = 0
+    lpath, lcap = (left[0] if left else ((), 0))
+    rpath, rcap = (right[0] if right else ((), 0))
+    while li < len(left) and ri < len(right):
+        m = min(lcap, rcap)
+        out.append((lpath + rpath[1:], m))
+        lcap -= m
+        rcap -= m
+        if lcap == 0:
+            li += 1
+            if li < len(left):
+                lpath, lcap = left[li]
+        if rcap == 0:
+            ri += 1
+            if ri < len(right):
+                rpath, rcap = right[ri]
+    return out
+
+
+def trivial_split(d: DiGraph, k: int) -> SplitResult:
+    """For already direct-connect topologies §2.2 is skippable."""
+    if d.switches:
+        raise ValueError("graph has switches; use remove_switches")
+    return SplitResult(graph=d.copy(), routing={}, original=d.copy(), k=k)

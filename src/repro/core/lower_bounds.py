@@ -1,0 +1,128 @@
+"""Lower bounds: allgather (1), broadcast (5), allreduce (6)+(7), Theorem 19.
+
+All bounds are returned as *runtime factors* in units of (data bytes) /
+(bandwidth unit): multiply by M/bandwidth-unit to get seconds.
+
+  allgather/reduce-scatter:  T >= (M/N) * inv_x_star              (1)
+  broadcast:                 T >= M / min-compute-cut             (5)
+  allreduce:                 T >= M / min-compute-cut             (6)
+  allreduce (Patarasuk-Yuan):T >= 2M(N-1)/N / max_v single-node-cut (7)
+"""
+from __future__ import annotations
+
+import itertools
+from fractions import Fraction
+from typing import Optional, Set, Tuple
+
+from .graph import DiGraph
+from .maxflow import FlowNetwork, build_network
+from .optimality import allgather_inv_xstar
+
+
+def min_compute_separating_cut(g: DiGraph) -> int:
+    """min_{S: S∩Vc ∉ {∅,Vc}} B+_G(S).
+
+    For Eulerian G this equals min over v of F(v0, v; G) for any fixed
+    compute node v0 (cuts not containing v0 have Eulerian-equal complements
+    that do)."""
+    vc = sorted(g.compute)
+    if len(vc) < 2:
+        raise ValueError("need >= 2 compute nodes")
+    v0 = vc[0]
+    best = None
+    for v in vc[1:]:
+        net = build_network(g)
+        f = net.maxflow(v0, v)
+        best = f if best is None else min(best, f)
+        # Eulerian symmetry: also the reverse direction
+        net = build_network(g)
+        f = net.maxflow(v, v0)
+        best = min(best, f)
+    return best
+
+
+def single_node_cut(g: DiGraph, v: int) -> int:
+    """min_{S: S∩Vc = {v}} B+_G(S): maxflow from v to a super-sink tied to
+    every other compute node with ∞ capacity."""
+    inf = sum(g.cap.values()) + 1
+    net = FlowNetwork(g.num_nodes + 1)
+    t = g.num_nodes
+    for (a, b), c in g.cap.items():
+        net.add_edge(a, b, c)
+    for u in sorted(g.compute):
+        if u != v:
+            net.add_edge(u, t, inf)
+    return net.maxflow(v, t)
+
+
+def broadcast_lb(g: DiGraph) -> Fraction:
+    """Eq (5): runtime factor M * [min cut]^-1 — per unit M."""
+    return Fraction(1, min_compute_separating_cut(g))
+
+
+def allreduce_lb(g: DiGraph) -> Fraction:
+    """max of eq (6) and eq (7), per unit M."""
+    n = g.num_compute
+    lb6 = Fraction(1, min_compute_separating_cut(g))
+    best_single = max(single_node_cut(g, v) for v in sorted(g.compute))
+    lb7 = Fraction(2 * (n - 1), n) / best_single
+    return max(lb6, lb7)
+
+
+def allgather_lb(g: DiGraph) -> Fraction:
+    """Eq (1): runtime factor per unit M (the 1/N is folded in)."""
+    return allgather_inv_xstar(g) / g.num_compute
+
+
+def rs_ag_allreduce_runtime(g: DiGraph) -> Fraction:
+    """Runtime factor (per unit M) of optimal RS+AG allreduce: RS on G^T has
+    the same optimum as AG on G (paper App. B), so RS+AG = 2 * (1)."""
+    return 2 * allgather_lb(g)
+
+
+def re_bc_allreduce_runtime(g: DiGraph) -> Fraction:
+    """Runtime factor of optimal reduce+broadcast (Blink-style): reduce is
+    reversed broadcast (same bound), so RE+BC = 2 * (5)."""
+    return 2 * broadcast_lb(g)
+
+
+# ---------------------------------------------------------------------- #
+# Bottleneck-cut argmax + Theorem 19 (exponential — analysis/tests only)
+# ---------------------------------------------------------------------- #
+
+def brute_force_bottleneck_cut(g: DiGraph) -> Tuple[Set[int], Fraction]:
+    """argmax_S |S∩Vc|/B+(S) by enumeration (guarded to small graphs)."""
+    if g.num_nodes > 20:
+        raise ValueError("bottleneck-cut enumeration limited to <= 20 nodes")
+    best_cut: Set[int] = set()
+    best = Fraction(0)
+    nodes = list(range(g.num_nodes))
+    for r in range(1, g.num_nodes + 1):
+        for s in itertools.combinations(nodes, r):
+            ss = set(s)
+            if g.compute <= ss or not (ss & g.compute):
+                continue
+            out = g.egress_set(ss)
+            if out == 0:
+                continue
+            val = Fraction(len(ss & g.compute), out)
+            if val > best:
+                best, best_cut = val, ss
+    return best_cut, best
+
+
+def theorem19_rs_ag_optimal(g: DiGraph) -> Optional[str]:
+    """Check Theorem 19's sufficient conditions for RS+AG allreduce
+    optimality.  Returns the satisfied condition name or None."""
+    n = g.num_compute
+    s_star, _ = brute_force_bottleneck_cut(g)
+    nc = len(s_star & g.compute)
+    if 2 * nc == n:
+        return "(a) |S*∩Vc| = N/2"
+    if nc == 1:
+        (v_prime,) = tuple(s_star & g.compute)
+        mine = single_node_cut(g, v_prime)
+        best = max(single_node_cut(g, v) for v in sorted(g.compute))
+        if mine == best:
+            return "(b) singleton bottleneck with max single-node cut"
+    return None

@@ -1,0 +1,181 @@
+"""Dinic's max-flow — the oracle engine behind every theorem in the paper.
+
+Dinic's algorithm is strongly polynomial (O(V^2 E) independent of capacity
+values), which is what makes the whole schedule generator strongly
+polynomial.  We add an optional `limit` argument: every caller in this
+codebase only ever needs to know whether the flow reaches some threshold
+(Theorems 1, 5, 8, 12), so we stop augmenting as soon as the threshold is
+met — a large constant-factor win.
+
+Capacities are Python ints (arbitrary precision): the optimality search
+scales capacities by binary-search denominators, which can grow large.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from .graph import DiGraph, Edge
+
+INF = float("inf")
+
+
+class FlowNetwork:
+    """Residual flow network with integer capacities."""
+
+    __slots__ = ("n", "to", "cap", "head", "nxt", "first_free")
+
+    def __init__(self, n: int):
+        self.n = n
+        # edge arrays (paired: edge i and i^1 are residual partners)
+        self.to: List[int] = []
+        self.cap: List[int] = []
+        # adjacency as linked lists: head[u] -> edge index, nxt[i] -> next edge
+        self.head: List[int] = [-1] * n
+        self.nxt: List[int] = []
+
+    def add_node(self) -> int:
+        self.head.append(-1)
+        self.n += 1
+        return self.n - 1
+
+    def add_edge(self, u: int, v: int, cap: int) -> int:
+        """Add directed edge u->v with given capacity; returns edge id."""
+        i = len(self.to)
+        self.to.append(v); self.cap.append(cap)
+        self.nxt.append(self.head[u]); self.head[u] = i
+        self.to.append(u); self.cap.append(0)
+        self.nxt.append(self.head[v]); self.head[v] = i + 1
+        return i
+
+    def edge_flow(self, edge_id: int) -> int:
+        """Flow currently pushed through edge `edge_id` (reverse residual)."""
+        return self.cap[edge_id ^ 1]
+
+    def reset_flow(self) -> None:
+        for i in range(0, len(self.to), 2):
+            total = self.cap[i] + self.cap[i + 1]
+            self.cap[i] = total
+            self.cap[i + 1] = 0
+
+    # ------------------------------------------------------------------ #
+    def maxflow(self, s: int, t: int, limit: Optional[int] = None) -> int:
+        """Max flow s->t, early-exiting once `limit` is reached."""
+        if s == t:
+            raise ValueError("source == sink")
+        flow = 0
+        cap, to, nxt = self.cap, self.to, self.nxt
+        while limit is None or flow < limit:
+            # BFS level graph
+            level = [-1] * self.n
+            level[s] = 0
+            queue = [s]
+            qi = 0
+            while qi < len(queue):
+                u = queue[qi]; qi += 1
+                i = self.head[u]
+                while i != -1:
+                    v = to[i]
+                    if cap[i] > 0 and level[v] < 0:
+                        level[v] = level[u] + 1
+                        queue.append(v)
+                    i = nxt[i]
+            if level[t] < 0:
+                break
+            # iterative DFS blocking flow with current-arc optimisation
+            it = list(self.head)
+            while True:
+                # find augmenting path in level graph
+                path: List[int] = []  # edge ids
+                u = s
+                found = False
+                while True:
+                    if u == t:
+                        found = True
+                        break
+                    i = it[u]
+                    advanced = False
+                    while i != -1:
+                        v = to[i]
+                        if cap[i] > 0 and level[v] == level[u] + 1:
+                            path.append(i)
+                            u = v
+                            advanced = True
+                            break
+                        i = nxt[i]
+                        it[u] = i
+                    if not advanced:
+                        if not path:
+                            break
+                        # retreat: dead-end, remove node from level graph
+                        level[u] = -1
+                        last = path.pop()
+                        u = to[last ^ 1]
+                        it[u] = nxt[last] if it[u] == last else it[u]
+                if not found:
+                    break
+                aug = min(cap[i] for i in path)
+                if limit is not None:
+                    aug = min(aug, limit - flow)
+                for i in path:
+                    cap[i] -= aug
+                    cap[i ^ 1] += aug
+                flow += aug
+                if limit is not None and flow >= limit:
+                    return flow
+        return flow
+
+    def min_cut_side(self, s: int) -> List[int]:
+        """After maxflow, the source side of a min cut (residual-reachable)."""
+        seen = [False] * self.n
+        seen[s] = True
+        stack = [s]
+        while stack:
+            u = stack.pop()
+            i = self.head[u]
+            while i != -1:
+                v = self.to[i]
+                if self.cap[i] > 0 and not seen[v]:
+                    seen[v] = True
+                    stack.append(v)
+                i = self.nxt[i]
+        return [u for u in range(self.n) if seen[u]]
+
+
+# ---------------------------------------------------------------------- #
+# Flow-network builders used by the paper's constructions
+# ---------------------------------------------------------------------- #
+
+def build_network(g: DiGraph, extra_nodes: int = 0) -> FlowNetwork:
+    """FlowNetwork over g's nodes (+extra), with g's edges installed."""
+    net = FlowNetwork(g.num_nodes + extra_nodes)
+    for (u, v), c in g.cap.items():
+        net.add_edge(u, v, c)
+    return net
+
+
+def build_Dk(g: DiGraph, k: int, scale: int = 1) -> Tuple[FlowNetwork, int]:
+    """The paper's ``D_k`` network: add source s with cap-k edges to every
+    compute node.  Capacities (including k) are multiplied by `scale`
+    (used by the rational binary search).  Returns (net, source_id)."""
+    net = FlowNetwork(g.num_nodes + 1)
+    s = g.num_nodes
+    for (u, v), c in g.cap.items():
+        net.add_edge(u, v, c * scale)
+    for u in sorted(g.compute):
+        net.add_edge(s, u, k)  # caller pre-scales k if needed
+    return net, s
+
+
+def min_flow_from_source(g: DiGraph, k_scaled: int, cap_scale: int,
+                         threshold: int) -> bool:
+    """Test  min_{v∈Vc} F(s, v; G_x)  >=  threshold  (Theorem 1 oracle).
+
+    The rational source capacity x = k_scaled / cap_scale is realised by
+    scaling the topology capacities by `cap_scale` and the source edges by
+    ... nothing (the caller passes k_scaled already in scaled units).
+    """
+    for v in sorted(g.compute):
+        net, s = build_Dk(g, k_scaled, scale=cap_scale)
+        if net.maxflow(s, v, limit=threshold) < threshold:
+            return False
+    return True

@@ -1,0 +1,305 @@
+"""Pipeline schedule IR — from spanning trees to executable comm rounds.
+
+A `PipelineSchedule` is the deployable artifact: a static list of rounds,
+each a list of `Send(src, dst, root, slot)` operations at chunk granularity.
+Chunking implements the paper's §1.3 resolution of the minimality-or-
+saturation dilemma: each of the k trees per root streams P chunks, so the
+runtime converges to the optimum as (P + depth − 1)/P → 1.
+
+Builders:
+  compile_allgather      — §2.1-2.3 end-to-end (optimality, split, pack)
+  compile_reduce_scatter — allgather on the transpose graph, reversed
+                           (paper Appendix B / Zhao et al. [19] App. A)
+  compile_allreduce      — RS + AG concatenation (Appendix B)
+  compile_broadcast      — Appendix A (single root, λ(r) trees)
+
+Physical path assignment: every tree-edge unit of capacity is bound to a
+concrete switch path of the original graph G (via the edge-splitting
+`routing` table), so the simulator can re-validate the bandwidth bound on
+*physical* links, and a deployment can emit per-link send/recv programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .arborescence import (TreeClass, max_tree_depth, pack_arborescences,
+                           pack_rooted_trees, verify_packing)
+from .edge_split import (SplitResult, expand_paths, remove_switches,
+                         trivial_split)
+from .graph import DiGraph, Edge
+from .maxflow import build_network
+from .optimality import Optimality, solve_optimality
+from .fixed_k import solve_fixed_k
+
+
+@dataclasses.dataclass(frozen=True)
+class Send:
+    """One chunk transfer on the logical graph D*."""
+    src: int
+    dst: int
+    root: int      # whose shard this chunk belongs to
+    slot: int      # chunk slot within the root's shard, in [0, k*P)
+    cls: int       # class index (for path assignment / debugging)
+
+
+@dataclasses.dataclass
+class PipelineSchedule:
+    kind: str                      # allgather | reduce_scatter | broadcast
+    topo: DiGraph                  # original G (possibly with switches)
+    dstar: DiGraph                 # logical compute-only graph (caps U*b_e)
+    opt: Optimality
+    classes: List[TreeClass]
+    split: SplitResult
+    num_chunks: int                # P — pipeline chunks per tree
+    rounds: List[List[Send]]
+    class_slot_offset: List[int]   # per class: first slot within root shard
+    # physical path assignment: (cls, edge) -> [(path, units), ...]
+    path_assignment: Dict[Tuple[int, Edge], List[Tuple[Tuple[int, ...], int]]]
+
+    @property
+    def nodes(self) -> List[int]:
+        return sorted(self.dstar.compute)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.dstar.compute)
+
+    @property
+    def k(self) -> int:
+        return self.opt.k
+
+    @property
+    def slots_per_shard(self) -> int:
+        return self.opt.k * self.num_chunks
+
+    @property
+    def depth(self) -> int:
+        return max_tree_depth(self.classes)
+
+    def total_sends(self) -> int:
+        return sum(len(r) for r in self.rounds)
+
+    def lb_runtime_factor(self) -> Fraction:
+        """Optimal T_B per unit data M per unit bandwidth: (1/N)·(1/x*)."""
+        return self.opt.inv_x_star / self.num_nodes
+
+    def describe(self) -> str:
+        return (f"{self.kind} on {self.topo.name}: N={self.num_nodes} "
+                f"k={self.k} P={self.num_chunks} depth={self.depth} "
+                f"rounds={len(self.rounds)} sends={self.total_sends()} "
+                f"1/x*={self.opt.inv_x_star}")
+
+
+# ---------------------------------------------------------------------- #
+# Allgather round construction (store-and-forward over the tree pipeline)
+# ---------------------------------------------------------------------- #
+
+def _build_allgather_rounds(
+        classes: Sequence[TreeClass], num_chunks: int
+) -> Tuple[List[List[Send]], List[int]]:
+    """Chunk-granular rounds: per round, each tree edge of class c forwards
+    up to m_c in-order chunks (m_c = class multiplicity = its capacity
+    share on every one of its edges)."""
+    # slot offsets: classes of the same root occupy disjoint slot ranges
+    offset: List[int] = []
+    per_root: Dict[int, int] = {}
+    for c in classes:
+        offset.append(per_root.get(c.root, 0))
+        per_root[c.root] = per_root.get(c.root, 0) + c.mult * num_chunks
+
+    total = [c.mult * num_chunks for c in classes]          # chunks per class
+    received = [{c.root: total[i]} for i, c in enumerate(classes)]
+    sent: List[Dict[Edge, int]] = [dict() for _ in classes]
+
+    rounds: List[List[Send]] = []
+    done = False
+    while not done:
+        this_round: List[Send] = []
+        new_received: List[Dict[int, int]] = [dict(r) for r in received]
+        for ci, c in enumerate(classes):
+            for e in c.edges:
+                a, b = e
+                got = received[ci].get(a, 0)
+                s = sent[ci].get(e, 0)
+                n = min(c.mult, got - s, total[ci] - s)
+                if n <= 0:
+                    continue
+                for t in range(s, s + n):
+                    this_round.append(
+                        Send(src=a, dst=b, root=c.root,
+                             slot=offset[ci] + t, cls=ci))
+                sent[ci][e] = s + n
+                new_received[ci][b] = new_received[ci].get(b, 0) + n
+        received = new_received
+        if not this_round:
+            # all deliveries complete?
+            done = all(
+                received[ci].get(v, 0) == total[ci]
+                for ci, c in enumerate(classes) for v in c.verts)
+            if not done:
+                raise RuntimeError("pipeline stalled before completion")
+        else:
+            rounds.append(this_round)
+            done = all(
+                received[ci].get(v, 0) == total[ci]
+                for ci, c in enumerate(classes) for v in c.verts)
+    return rounds, offset
+
+
+# ---------------------------------------------------------------------- #
+# Physical path assignment
+# ---------------------------------------------------------------------- #
+
+def _assign_paths(split: SplitResult, classes: Sequence[TreeClass]
+                  ) -> Dict[Tuple[int, Edge], List[Tuple[Tuple[int, ...], int]]]:
+    """Bind each class's per-edge capacity share to concrete physical paths
+    (a flow decomposition of the edge-splitting routing table)."""
+    pool = expand_paths(split)          # (u,t) -> [(path, cap)] totals = cap
+    remaining: Dict[Edge, List[List]] = {
+        e: [[list(p), c] for (p, c) in plist] for e, plist in pool.items()}
+    assignment: Dict[Tuple[int, Edge], List[Tuple[Tuple[int, ...], int]]] = {}
+    for ci, c in enumerate(classes):
+        for e in c.edges:
+            need = c.mult
+            alloc: List[Tuple[Tuple[int, ...], int]] = []
+            for slot in remaining.get(e, ()):  # [path, cap] mutable
+                if need == 0:
+                    break
+                take = min(need, slot[1])
+                if take > 0:
+                    alloc.append((tuple(slot[0]), take))
+                    slot[1] -= take
+                    need -= take
+            if need != 0:
+                raise RuntimeError(
+                    f"path pool exhausted for class {ci} edge {e} (short {need})")
+            assignment[(ci, e)] = alloc
+    return assignment
+
+
+# ---------------------------------------------------------------------- #
+# Public compilers
+# ---------------------------------------------------------------------- #
+
+def _prepare(topo: DiGraph, fixed_k: Optional[int],
+             pair_priority=None, verify: bool = False
+             ) -> Tuple[Optimality, SplitResult]:
+    """§2.1 + §2.2 (+ §2.4 if fixed_k given): optimality then switch removal."""
+    if fixed_k is None:
+        opt = solve_optimality(topo)
+        scaled = topo.scaled(opt.U)
+        k = opt.k
+    else:
+        res = solve_fixed_k(topo, fixed_k)
+        opt = Optimality(inv_x_star=res.runtime_factor, U=res.U_star,
+                         k=fixed_k)
+        scaled = topo.floor_scaled(res.U_star)
+        k = fixed_k
+    if scaled.switches and any(w in e for e in scaled.cap
+                               for w in scaled.switches):
+        split = remove_switches(scaled, k, pair_priority=pair_priority,
+                                verify=verify)
+    else:
+        split = trivial_split(scaled, k)
+    return opt, split
+
+
+def compile_allgather(topo: DiGraph, num_chunks: int = 8,
+                      fixed_k: Optional[int] = None,
+                      pair_priority=None, verify: bool = False
+                      ) -> PipelineSchedule:
+    """End-to-end §2: bandwidth-optimal allgather pipeline schedule."""
+    opt, split = _prepare(topo, fixed_k, pair_priority, verify)
+    classes = pack_arborescences(split.graph, opt.k)
+    rounds, offsets = _build_allgather_rounds(classes, num_chunks)
+    paths = _assign_paths(split, classes)
+    return PipelineSchedule(
+        kind="allgather", topo=topo, dstar=split.graph, opt=opt,
+        classes=classes, split=split, num_chunks=num_chunks, rounds=rounds,
+        class_slot_offset=offsets, path_assignment=paths)
+
+
+def compile_reduce_scatter(topo: DiGraph, num_chunks: int = 8,
+                           fixed_k: Optional[int] = None,
+                           pair_priority=None, verify: bool = False
+                           ) -> PipelineSchedule:
+    """Reduce-scatter = allgather compiled on G^T with all sends reversed
+    (src/dst swapped, round order flipped).  In the reversed schedule every
+    node forwards a chunk to its tree-parent only after all tree-children
+    delivered theirs — the store-and-forward order of the forward schedule
+    guarantees it."""
+    ag = compile_allgather(topo.transpose(), num_chunks, fixed_k,
+                           pair_priority, verify)
+    rounds = [
+        [Send(src=s.dst, dst=s.src, root=s.root, slot=s.slot, cls=s.cls)
+         for s in rnd]
+        for rnd in reversed(ag.rounds)]
+    return PipelineSchedule(
+        kind="reduce_scatter", topo=topo, dstar=ag.dstar.transpose(),
+        opt=ag.opt, classes=ag.classes, split=ag.split,
+        num_chunks=num_chunks, rounds=rounds,
+        class_slot_offset=ag.class_slot_offset,
+        path_assignment=ag.path_assignment)
+
+
+@dataclasses.dataclass
+class AllReduceSchedule:
+    """RS + AG concatenation (paper Appendix B)."""
+    rs: PipelineSchedule
+    ag: PipelineSchedule
+
+    @property
+    def topo(self) -> DiGraph:
+        return self.rs.topo
+
+    @property
+    def num_nodes(self) -> int:
+        return self.rs.num_nodes
+
+    def runtime_factor(self) -> Fraction:
+        """2 · (M/N) · 1/x* per unit M — optimal under Theorem 19 conditions."""
+        return self.rs.lb_runtime_factor() + self.ag.lb_runtime_factor()
+
+    def describe(self) -> str:
+        return f"allreduce = [{self.rs.describe()}] + [{self.ag.describe()}]"
+
+
+def compile_allreduce(topo: DiGraph, num_chunks: int = 8,
+                      fixed_k: Optional[int] = None,
+                      pair_priority=None, verify: bool = False
+                      ) -> AllReduceSchedule:
+    rs = compile_reduce_scatter(topo, num_chunks, fixed_k, pair_priority,
+                                verify)
+    ag = compile_allgather(topo, num_chunks, fixed_k, pair_priority, verify)
+    return AllReduceSchedule(rs=rs, ag=ag)
+
+
+def compile_broadcast(topo: DiGraph, root: int, num_chunks: int = 8
+                      ) -> PipelineSchedule:
+    """Appendix A: pack λ(root) = min_v F(root, v; G) edge-disjoint out-trees
+    from a single root; each streams 1/λ of the data.  (Direct-connect
+    topologies only — switch removal for the broadcast invariant is a
+    different splitting criterion; see DESIGN.md.)"""
+    if any(w in e for e in topo.cap for w in topo.switches):
+        raise NotImplementedError(
+            "broadcast compilation requires a direct-connect topology")
+    lam = None
+    for v in sorted(topo.compute):
+        if v == root:
+            continue
+        f = build_network(topo).maxflow(root, v)
+        lam = f if lam is None else min(lam, f)
+    if not lam:
+        raise ValueError("root cannot reach some compute node")
+    classes = pack_rooted_trees(topo, {root: lam})
+    rounds, offsets = _build_allgather_rounds(classes, num_chunks)
+    opt = Optimality(inv_x_star=Fraction(len(topo.compute), lam),
+                     U=Fraction(1), k=lam)
+    split = trivial_split(topo, lam)
+    paths = _assign_paths(split, classes)
+    return PipelineSchedule(
+        kind="broadcast", topo=topo, dstar=topo, opt=opt, classes=classes,
+        split=split, num_chunks=num_chunks, rounds=rounds,
+        class_slot_offset=offsets, path_assignment=paths)

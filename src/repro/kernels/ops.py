@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True on CPU (this container) and False on TPU, so
+the same call sites work in tests and production.  `flash_attention_bshd`
+adapts the models' [B,S,H,D] layout and registers as the models' flash
+implementation via `repro.models.attention.set_flash_impl`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .chunk_accum import chunk_accum as _chunk_accum
+from .flash_attention import flash_attention as _flash
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, prefix_len=0,
+                    logit_cap=None, block_q=128, block_kv=128,
+                    interpret: Optional[bool] = None):
+    """[B,H,S,D] layout."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return _flash(q, k, v, causal=causal, window=window,
+                  prefix_len=prefix_len, logit_cap=logit_cap,
+                  block_q=block_q, block_kv=block_kv, interpret=interpret)
+
+
+def chunk_accum(acc, update, *, block_n=8, block_c=512,
+                interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _on_cpu()
+    return _chunk_accum(acc, update, block_n=block_n, block_c=block_c,
+                        interpret=interpret)
+
+
+def flash_attention_bshd(q, k, v, q_pos, kv_pos, spec, logit_cap):
+    """Adapter matching repro.models.attention's flash hook signature:
+    q: [B,S,H,D], k/v: [B,T,Hkv,D]; MaskSpec -> kernel flags."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(
+        qt, kt, vt, causal=spec.causal, window=spec.window,
+        prefix_len=spec.prefix_len, logit_cap=logit_cap)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def enable_flash_in_models() -> None:
+    from repro.models.attention import set_flash_impl
+    set_flash_impl(flash_attention_bshd)
+
+
+def disable_flash_in_models() -> None:
+    from repro.models.attention import set_flash_impl
+    set_flash_impl(None)

@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) cell, on the single-pod 16x16 mesh
+and the multi-pod 2x16x16 mesh:
+
+    jax.jit(step, in_shardings=..., out_shardings=...)
+        .lower(**ShapeDtypeStruct inputs)
+        .compile()
+
+must succeed; we record memory_analysis (fits per-chip HBM),
+cost_analysis (FLOPs / bytes for the roofline), and the per-kind
+collective bytes parsed from the HLO.  No arrays are ever allocated.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod both --out experiments/
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, ALL_SHAPES, get_config, shape_by_name, \
+    skip_reason
+from repro.models import build_model
+from repro.models.common import set_activation_sharding
+from repro.models.moe import set_moe_groups
+from repro.models.transformer import kv_cache_len
+from repro.train import AdamWConfig, TrainConfig, init_adamw, make_train_step
+from repro.analysis import hlo_count
+from repro.analysis.roofline import RooflineTerms, model_flops_for
+from .mesh import batch_axes, make_production_mesh, mesh_axis_sizes
+from .sharding import (batch_specs, decode_state_specs, opt_specs,
+                       param_specs, serving_param_specs, to_named)
+
+S = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------- #
+# input specs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------- #
+
+def batch_structs(cfg, shape) -> Dict[str, Any]:
+    """Model inputs for one step of the given kind."""
+    b = shape.global_batch
+    toks = shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        toks = max(16, toks - cfg.num_image_tokens)
+        out["patch_embed"] = S((b, cfg.num_image_tokens, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.family == "audio":
+        out["audio_embed"] = S((b, cfg.encoder_seq, cfg.d_model),
+                               jnp.bfloat16)
+    out["tokens"] = S((b, toks), jnp.int32)
+    return out
+
+
+def seq_pad_for(cfg, n: int) -> int:
+    """SSD chunked scan needs seq % chunk == 0 (all our shapes satisfy it)."""
+    if cfg.ssm_state_dim and n % cfg.ssm_chunk:
+        n += cfg.ssm_chunk - n % cfg.ssm_chunk
+    return n
+
+
+def install_activation_policy(mesh) -> None:
+    """Residual stream [B,S,d]: batch over (pod,data), sequence over model
+    (Megatron-style sequence parallelism — norms stay local, attention and
+    MLP re-gather).  Logits [B,S,V]: vocab over model.  constrain() skips
+    any tensor whose dims don't divide (decode's S=1, whisper's odd vocab)."""
+    bx = batch_axes(mesh)
+    set_activation_sharding({
+        "residual": NamedSharding(mesh, P(bx, "model", None)),
+        "logits": NamedSharding(mesh, P(bx, None, "model")),
+        # blockwise attention q/k/v [B,S,H,D]: heads over model; archs with
+        # fewer heads than the axis fall back to batch over every axis,
+        # then batch-over-data only (attention replicated across model)
+        "attn_qkv": [
+            NamedSharding(mesh, P(bx, None, "model", None)),
+            NamedSharding(mesh, P(bx + ("model",), None, None, None)),
+            NamedSharding(mesh, P(bx, None, None, None)),
+        ],
+        # GQA kv before local expansion: model-replicated (cheap, few heads)
+        "attn_kv_full": NamedSharding(mesh, P(bx, None, None, None)),
+        # MoE grouped dispatch: groups = data shards; expert ffn dim on model
+        "moe_tokens": NamedSharding(mesh, P(bx, None, None)),
+        "moe_dispatch": NamedSharding(mesh, P(bx, None, None, None)),
+        # ("moe_w_in"/"moe_w_out" — perf iteration B2 pinned expert
+        # weights data-replicated here; measured flat, entries removed)
+    })
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    set_moe_groups(int(np.prod([sizes[a] for a in bx])) if bx else 1)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    skip: Optional[str] = None
+    error: Optional[str] = None
+    seconds: float = 0.0
+    memory: Optional[Dict[str, float]] = None
+    cost: Optional[Dict[str, float]] = None
+    collective_bytes: Optional[Dict[str, int]] = None
+    collective_ops: Optional[Dict[str, int]] = None
+    roofline: Optional[Dict[str, Any]] = None
+
+
+def _mem_dict(compiled) -> Dict[str, float]:
+    m = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = float(v)
+    out["total_per_device"] = (
+        out.get("argument_size_in_bytes", 0.0)
+        + out.get("temp_size_in_bytes", 0.0)
+        + out.get("output_size_in_bytes", 0.0)
+        - out.get("alias_size_in_bytes", 0.0))
+    return out
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return {k: float(v) for k, v in c.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" not in k)}
+
+
+# ---------------------------------------------------------------------- #
+# per-cell lowering
+# ---------------------------------------------------------------------- #
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               donate: bool = True) -> CellResult:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    reason = skip_reason(arch, shape)
+    if reason:
+        return CellResult(arch, shape_name, mesh_name, ok=True, skip=reason)
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(np.prod(mesh.devices.shape))
+        model = build_model(cfg, remat=True)
+
+        if shape.kind == "train":
+            lowered = _lower_train(model, cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            lowered = _lower_prefill(model, cfg, shape, mesh)
+        else:
+            lowered = _lower_decode(model, cfg, shape, mesh)
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+        # trip-adjusted counts (XLA's cost_analysis counts scan bodies once)
+        counted = hlo_count.count(hlo)
+        coll = counted["collective_bytes"]
+        ops = counted["collective_ops"]
+        cost = _cost_dict(compiled)
+        cost["flops_trip_adjusted"] = counted["flops"]
+        cost["bytes_trip_adjusted"] = counted["bytes"]
+        mem = _mem_dict(compiled)
+        terms = RooflineTerms(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops=counted["flops"],
+            hlo_bytes=counted["bytes"],
+            collective_bytes=coll,
+            model_flops=model_flops_for(cfg, shape))
+        return CellResult(arch, shape_name, mesh_name, ok=True,
+                          seconds=time.time() - t0, memory=mem, cost=cost,
+                          collective_bytes=coll, collective_ops=ops,
+                          roofline=terms.row())
+    except Exception:  # noqa: BLE001 — any lowering failure is a bug report
+        return CellResult(arch, shape_name, mesh_name, ok=False,
+                          seconds=time.time() - t0,
+                          error=traceback.format_exc(limit=6))
+
+
+def _lower_train(model, cfg, shape, mesh):
+    install_activation_policy(mesh)
+    # B1 layout: live params bf16, f32 master + moments in the optimizer
+    # (grads reduce in bf16 — half the DP gradient wire bytes)
+    params_s = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), jnp.bfloat16))
+    p_spec = param_specs(params_s, mesh, fsdp=True)
+    tc = TrainConfig(optimizer=AdamWConfig(), microbatches=1,
+                     compute_dtype=jnp.bfloat16)
+    step = make_train_step(model, tc)
+    opt_s = jax.eval_shape(lambda p: init_adamw(p, keep_master=True),
+                           params_s)
+    batch_s = batch_structs(cfg, shape)
+    o_spec = opt_specs(p_spec, keep_master=True)
+    b_spec = batch_specs(batch_s, mesh)
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=(to_named(p_spec, mesh), to_named(o_spec, mesh),
+                          to_named(b_spec, mesh)),
+            out_shardings=(to_named(p_spec, mesh), to_named(o_spec, mesh),
+                           None),
+            donate_argnums=(0, 1))
+        return jitted.lower(params_s, opt_s, batch_s)
+
+
+def _lower_prefill(model, cfg, shape, mesh):
+    install_activation_policy(mesh)
+    params_s = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), jnp.bfloat16))
+    seq = seq_pad_for(cfg, shape.seq_len)
+    state_s = jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, seq,
+                                        jnp.bfloat16))
+    batch_s = batch_structs(cfg, shape)
+    p_spec = serving_param_specs(params_s, mesh)
+    st_spec = decode_state_specs(state_s, cfg, mesh)
+    b_spec = batch_specs(batch_s, mesh)
+    with mesh:
+        jitted = jax.jit(
+            model.prefill,
+            in_shardings=(to_named(p_spec, mesh), to_named(b_spec, mesh),
+                          to_named(st_spec, mesh)),
+            out_shardings=(to_named(st_spec, mesh), None),
+            donate_argnums=(2,))
+        return jitted.lower(params_s, batch_s, state_s)
+
+
+def _lower_decode(model, cfg, shape, mesh):
+    install_activation_policy(mesh)
+    params_s = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), jnp.bfloat16))
+    seq = seq_pad_for(cfg, shape.seq_len)
+    state_s = jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, seq,
+                                        jnp.bfloat16))
+    token_s = S((shape.global_batch, 1), jnp.int32)
+    index_s = S((), jnp.int32)
+    p_spec = serving_param_specs(params_s, mesh)
+    st_spec = decode_state_specs(state_s, cfg, mesh)
+    tok_spec = batch_specs(token_s, mesh)
+    with mesh:
+        jitted = jax.jit(
+            model.decode_step,
+            in_shardings=(to_named(p_spec, mesh), to_named(tok_spec, mesh),
+                          to_named(st_spec, mesh), None),
+            out_shardings=(None, to_named(st_spec, mesh)),
+            donate_argnums=(2,))
+        return jitted.lower(params_s, token_s, state_s, index_s)
+
+
+# ---------------------------------------------------------------------- #
+# CLI
+# ---------------------------------------------------------------------- #
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None, help="input-shape name")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--multi-pod", choices=("on", "off", "both"),
+                    default="off")
+    ap.add_argument("--out", default=None, help="JSON output directory")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    pods = {"on": [True], "off": [False], "both": [False, True]}[
+        args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                r = lower_cell(arch, shape, multi_pod=mp)
+                results.append(r)
+                tag = f"{arch}/{shape}/{r.mesh}"
+                if r.skip:
+                    print(f"SKIP {tag}: {r.skip}", flush=True)
+                elif r.ok:
+                    rf = r.roofline
+                    print(f"OK   {tag} [{r.seconds:.1f}s] "
+                          f"mem/dev={r.memory['total_per_device']/2**30:.2f}GiB "
+                          f"dominant={rf['dominant']} "
+                          f"compute={rf['compute_s']*1e3:.2f}ms "
+                          f"memory={rf['memory_s']*1e3:.2f}ms "
+                          f"collective={rf['collective_s']*1e3:.2f}ms",
+                          flush=True)
+                else:
+                    print(f"FAIL {tag} [{r.seconds:.1f}s]\n{r.error}",
+                          flush=True)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    fn = f"{arch}__{shape}__{r.mesh}.json".replace("/", "_")
+                    with open(os.path.join(args.out, fn), "w") as f:
+                        json.dump(dataclasses.asdict(r), f, indent=1)
+    bad = [r for r in results if not r.ok]
+    print(f"\n{len(results) - len(bad)}/{len(results)} cells OK")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

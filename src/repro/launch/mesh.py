@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes (data, model) — matches a v5e pod's 2-D
+ICI torus.  Multi-pod: 2 x 16 x 16 = 512 chips with a leading 'pod' axis
+crossing DCN.  Defined as a FUNCTION so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Axes the global batch shards over (pod + data when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,162 @@
+"""Sharding policy: PartitionSpecs for params / optimizer / batch / decode
+state, per architecture and mesh.
+
+Training uses FSDP+TP hybrid ("zero3"): every large parameter matrix is
+sharded along BOTH the data axis (FSDP — XLA all-gathers per scan step and
+reduce-scatters grads) and the model axis (TP).  Serving uses TP only
+(params replicated across data so decode batches scale).
+
+All assignments are divisibility-checked against the mesh; each rule lists
+fallback dims so odd shapes (whisper's 51865 vocab, 8-kv-head caches on a
+16-way model axis) degrade gracefully instead of failing to lower.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+Axis = Optional[str]
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _assign(shape: Sequence[int], prefs: Sequence[Tuple[int, str]],
+            axis_sizes: Dict[str, int]) -> P:
+    """Greedy: for each (dim, axis) preference, take it if divisible and
+    neither dim nor axis is already used."""
+    spec: list = [None] * len(shape)
+    used_axes = set()
+    for dim, axis in prefs:
+        if dim >= len(shape) or spec[dim] is not None or axis in used_axes:
+            continue
+        if axis in axis_sizes and _fits(shape[dim], axis_sizes[axis]):
+            spec[dim] = axis
+            used_axes.add(axis)
+    return P(*spec)
+
+
+# param-name patterns -> sharding preferences, as (regex, [(dim, axis)...])
+# dims are indexed on the LOGICAL tensor (without the stacked layer dim; the
+# layer dim is detected and offsets the indices).
+_PARAM_RULES = [
+    # moe experts [E, d, ff] / [E, ff, d] MUST precede the generic matmul
+    # rules: TP on the per-expert ff dim, FSDP on d
+    (r"moe/w_(gate|up)$", [(2, "model"), (1, "data")]),
+    (r"moe/w_down$", [(1, "model"), (2, "data")]),
+    (r"embed$", [(0, "model"), (1, "data")]),
+    (r"lm_head$", [(1, "model"), (0, "data")]),
+    (r"(wq|wk|wv|w_gate|w_up|w_in|in_proj)$", [(1, "model"), (0, "data")]),
+    (r"(wo|w_down|w_out|out_proj)$", [(0, "model"), (1, "data")]),
+    (r"router$", [(1, "data")]),
+    (r"conv_w$", [(1, "model")]),
+    (r"conv_b$", [(0, "model")]),
+]
+
+
+def _param_spec(path: str, shape: Sequence[int], stacked: bool,
+                axis_sizes: Dict[str, int], fsdp: bool) -> P:
+    off = 1 if stacked else 0
+    for pat, prefs in _PARAM_RULES:
+        if re.search(pat, path):
+            prefs = [(d + off, a) for (d, a) in prefs
+                     if fsdp or a != "data"]
+            return _assign(shape, prefs, axis_sizes)
+    return P()  # norms, scalars, biases: replicated
+
+
+def _is_stacked(path: str) -> bool:
+    return ("layers/" in path) or path.startswith("layers")
+
+
+def tree_path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_specs(params_shape: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def assign(path, leaf):
+        p = tree_path_str(path)
+        return _param_spec(p, leaf.shape, _is_stacked(p), sizes, fsdp)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def opt_specs(param_spec_tree: Any, keep_master: bool = False) -> Any:
+    """AdamW state: step replicated; mu/nu (and the f32 master copy in
+    mixed-precision mode) mirror the param specs."""
+    from repro.train.optimizer import AdamWState
+    copy = lambda: jax.tree_util.tree_map(lambda s: s, param_spec_tree)
+    return AdamWState(step=P(), mu=param_spec_tree, nu=copy(),
+                      master=copy() if keep_master else None)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Shard the batch dim over (pod, data) when divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = tuple(a for a in ("pod", "data") if a in sizes)
+    group = int(np.prod([sizes[a] for a in axes])) if axes else 1
+
+    def assign(leaf):
+        if leaf.ndim and _fits(leaf.shape[0], group):
+            return P(axes)
+        return P()
+
+    return jax.tree_util.tree_map(assign, batch_shape)
+
+
+def decode_state_specs(state_shape: Any, cfg: ModelConfig,
+                       mesh: Mesh) -> Any:
+    """KV caches [L,B,T,H,D]: batch over (pod,data) when divisible; heads
+    over model, falling back to head_dim then cache length.  SSM states
+    [L,B,H,P,N]: heads over model.  Encoder outputs [B,T,d]: batch + d."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = tuple(a for a in ("pod", "data") if a in sizes)
+    dgroup = int(np.prod([sizes[a] for a in daxes])) if daxes else 1
+
+    def assign(path, leaf):
+        p = tree_path_str(path)
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2 and _fits(shape[1], dgroup):
+            spec[1] = daxes          # batch dim (after layer stack dim)
+        msize = sizes.get("model", 1)
+        if p.startswith("kv") and len(shape) == 5:
+            for dim in (3, 4, 2):    # heads, head_dim, cache length
+                if _fits(shape[dim], msize):
+                    spec[dim] = "model"
+                    break
+        elif p.startswith("ssm") and len(shape) >= 4:
+            for dim in (2, 3, len(shape) - 1):
+                if _fits(shape[dim], msize):
+                    spec[dim] = "model"
+                    break
+        elif p.startswith("enc_out") and len(shape) == 3:
+            if _fits(shape[0], dgroup):
+                spec = [daxes, None, None]
+            if _fits(shape[2], msize):
+                spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, state_shape)
+
+
+def to_named(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def serving_param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """TP only (no FSDP): decode latency cannot afford per-step allgathers."""
+    return param_specs(params_shape, mesh, fsdp=False)

@@ -1,0 +1,182 @@
+"""Encoder-decoder transformer (Whisper-style).
+
+The audio conv frontend is a STUB per the assignment: `input_specs()` feeds
+precomputed frame embeddings [B, T_enc, d] (what the two conv layers would
+produce).  Encoder = bidirectional self-attention stack with sinusoidal
+positions; decoder = causal self-attention + cross-attention to the encoder
+output.  Whisper uses plain (non-gated) GELU MLPs — cfg.mlp_variant="plain".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import FULL, CAUSAL, MaskSpec, attention_forward, init_attention
+from .common import (ModelConfig, Params, constrain,
+                     cross_entropy_loss, dense_init, rms_norm, stacked_init)
+from .mlp import init_mlp, mlp_forward
+from .transformer import embed_tokens, lm_logits, next_token_loss
+
+
+def sinusoid_positions(length: int, dim: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, dim, 2) / dim)
+    table = np.zeros((length, dim), np.float32)
+    table[:, 0::2] = np.sin(pos * div)
+    table[:, 1::2] = np.cos(pos * div)
+    return table
+
+
+def init_encoder_layer(key: jax.Array, cfg: ModelConfig,
+                       dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "ln_attn": jnp.zeros((d,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln_mlp": jnp.zeros((d,), dtype),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, dtype, cfg.mlp_variant),
+    }
+
+
+def init_decoder_layer_xattn(key: jax.Array, cfg: ModelConfig,
+                             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln_self": jnp.zeros((d,), dtype),
+        "self_attn": init_attention(ks[0], cfg, dtype),
+        "ln_cross": jnp.zeros((d,), dtype),
+        "cross_attn": init_attention(ks[1], cfg, dtype),
+        "ln_mlp": jnp.zeros((d,), dtype),
+        "mlp": init_mlp(ks[2], d, cfg.d_ff, dtype, cfg.mlp_variant),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype, 0.02),
+        "enc_layers": stacked_init(
+            ks[1], cfg.encoder_layers,
+            lambda k: init_encoder_layer(k, cfg, dtype)),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec_layers": stacked_init(
+            ks[2], cfg.num_layers,
+            lambda k: init_decoder_layer_xattn(k, cfg, dtype)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig,
+           audio_embed: jax.Array, remat: bool = False) -> jax.Array:
+    """audio_embed: [B, T_enc, d] (stub frontend output)."""
+    t = audio_embed.shape[1]
+    pos_table = jnp.asarray(sinusoid_positions(t, cfg.d_model),
+                            audio_embed.dtype)
+    h = audio_embed + pos_table[None]
+    positions = jnp.arange(t)
+
+    def layer(lp, hh):
+        a_in = rms_norm(hh, lp["ln_attn"], cfg.norm_eps)
+        a_out, _ = attention_forward(lp["attn"], cfg, a_in, positions, FULL)
+        hh = hh + a_out
+        m_in = rms_norm(hh, lp["ln_mlp"], cfg.norm_eps)
+        return hh + mlp_forward(lp["mlp"], m_in, cfg.activation)
+
+    if remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(hh, lp):
+        return constrain(layer(lp, hh), "residual"), None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp: Params, cfg: ModelConfig, enc_out: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    b, t, _ = enc_out.shape
+    k = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+        b, t, cfg.num_kv_heads, cfg.hd)
+    v = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+        b, t, cfg.num_kv_heads, cfg.hd)
+    return k, v
+
+
+def decode_stack(params: Params, cfg: ModelConfig, h: jax.Array,
+                 positions: jax.Array, enc_out: jax.Array,
+                 caches: Optional[Any] = None,
+                 cache_index: Optional[jax.Array] = None,
+                 cache_positions: Optional[jax.Array] = None,
+                 remat: bool = False
+                 ) -> Tuple[jax.Array, Any]:
+    def layer(lp, hh, cc):
+        s_in = rms_norm(hh, lp["ln_self"], cfg.norm_eps)
+        sub_cache = (cc[0], cc[1]) if cc is not None else None
+        s_out, ncache = attention_forward(
+            lp["self_attn"], cfg, s_in, positions, CAUSAL,
+            cache=sub_cache, cache_index=cache_index,
+            cache_positions=cache_positions)
+        hh = hh + s_out
+        c_in = rms_norm(hh, lp["ln_cross"], cfg.norm_eps)
+        kv = _cross_kv(lp, cfg, enc_out)
+        c_out, _ = attention_forward(
+            lp["cross_attn"], cfg, c_in, positions, FULL, kv_override=kv)
+        hh = hh + c_out
+        m_in = rms_norm(hh, lp["ln_mlp"], cfg.norm_eps)
+        hh = hh + mlp_forward(lp["mlp"], m_in, cfg.activation)
+        return hh, ncache
+
+    if remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(hh, xs):
+        lp, cc = xs
+        out, ncache = layer(lp, hh, cc)
+        return constrain(out, "residual"), ncache
+
+    h, new_caches = jax.lax.scan(body, h, (params["dec_layers"], caches))
+    return h, new_caches
+
+
+def encdec_loss(params: Params, cfg: ModelConfig,
+                batch: Dict[str, jax.Array],
+                remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """batch: audio_embed [B,T_enc,d], tokens [B,S_dec]."""
+    enc_out = encode(params, cfg, batch["audio_embed"], remat=remat)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(params, cfg, tokens)
+    h, _ = decode_stack(params, cfg, h, jnp.arange(s), enc_out, remat=remat)
+    loss = next_token_loss(params, cfg, h, tokens, batch.get("loss_mask"))
+    return loss, loss
+
+
+def encdec_prefill(params: Params, cfg: ModelConfig,
+                   audio_embed: jax.Array, tokens: jax.Array,
+                   caches: Tuple[jax.Array, jax.Array]
+                   ) -> Tuple[Any, jax.Array, jax.Array]:
+    """Returns (caches, enc_out, last logits)."""
+    enc_out = encode(params, cfg, audio_embed)
+    b, s = tokens.shape
+    h = embed_tokens(params, cfg, tokens)
+    h, caches = decode_stack(params, cfg, h, jnp.arange(s), enc_out,
+                             caches=caches,
+                             cache_index=jnp.zeros((), jnp.int32))
+    return caches, enc_out, lm_logits(params, cfg, h[:, -1:])
+
+
+def encdec_decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                       enc_out: jax.Array,
+                       caches: Tuple[jax.Array, jax.Array],
+                       index: jax.Array) -> Tuple[jax.Array, Any]:
+    h = embed_tokens(params, cfg, token)
+    h, caches = decode_stack(params, cfg, h, index[None], enc_out,
+                             caches=caches, cache_index=index)
+    return lm_logits(params, cfg, h), caches

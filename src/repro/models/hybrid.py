@@ -1,0 +1,211 @@
+"""Hybrid SSM + shared-attention models (Zamba2 family) and the pure-SSM LM
+(Mamba2 family).
+
+Zamba2 interleaves Mamba2 layers with a single SHARED transformer block
+(attention + MLP) applied every `hybrid_attn_every` layers — the shared
+block's parameters are reused at every application (that is Zamba2's
+signature trick for parameter efficiency).  We scan over groups of mamba
+layers and apply the shared block between groups; its KV cache has one entry
+per application site.
+
+Simplifications vs the released checkpoints (noted in DESIGN.md): no LoRA
+adapters on the shared block and no concat-with-embedding input.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import CAUSAL, attention_forward, init_attention
+from .common import (ModelConfig, Params, constrain,
+                     cross_entropy_loss, dense_init, rms_norm, stacked_init)
+from .mlp import init_mlp, mlp_forward
+from .ssm import init_mamba2, init_ssm_state, mamba2_forward
+from .transformer import embed_tokens, lm_logits, next_token_loss
+
+
+# ---------------------------------------------------------------------- #
+# pure SSM LM (mamba2)
+# ---------------------------------------------------------------------- #
+
+def init_ssm_lm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype, 0.02),
+        "layers": stacked_init(
+            ks[1], cfg.num_layers,
+            lambda k: {"ln": jnp.zeros((cfg.d_model,), dtype),
+                       "mamba": init_mamba2(k, cfg, dtype)}),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def ssm_stack(params: Params, cfg: ModelConfig, h: jax.Array,
+              states: Optional[Any] = None,
+              remat: bool = False) -> Tuple[jax.Array, Any]:
+    """states: stacked (conv [L,B,W-1,C], ssm [L,B,H,P,N]) or None."""
+    def layer(lp, hh, st):
+        x_in = rms_norm(hh, lp["ln"], cfg.norm_eps)
+        out, new_st = mamba2_forward(lp["mamba"], cfg, x_in, st)
+        return hh + out, new_st
+
+    if remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(hh, xs):
+        lp, st = xs
+        out, new_st = layer(lp, hh, st)
+        return constrain(out, "residual"), new_st
+
+    h, new_states = jax.lax.scan(body, h, (params["layers"], states))
+    return h, new_states
+
+
+def ssm_lm_loss(params: Params, cfg: ModelConfig,
+                batch: Dict[str, jax.Array],
+                remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(params, cfg, tokens)
+    h, _ = ssm_stack(params, cfg, h, remat=remat)
+    loss = next_token_loss(params, cfg, h, tokens, batch.get("loss_mask"))
+    return loss, loss
+
+
+def init_ssm_lm_states(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    conv, ssm = init_ssm_state(cfg, batch, dtype)
+    stack = lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape)
+    return (stack(conv), stack(ssm))
+
+
+def ssm_lm_decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                       states: Any) -> Tuple[jax.Array, Any]:
+    """O(1) decode: no positions, no cache index — SSM state carries time."""
+    h = embed_tokens(params, cfg, token)
+    h, states = ssm_stack(params, cfg, h, states)
+    return lm_logits(params, cfg, h), states
+
+
+# ---------------------------------------------------------------------- #
+# hybrid LM (zamba2)
+# ---------------------------------------------------------------------- #
+
+def num_shared_sites(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.hybrid_attn_every
+
+
+def init_hybrid_lm(key: jax.Array, cfg: ModelConfig,
+                   dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype, 0.02),
+        "layers": stacked_init(
+            ks[1], cfg.num_layers,
+            lambda k: {"ln": jnp.zeros((cfg.d_model,), dtype),
+                       "mamba": init_mamba2(k, cfg, dtype)}),
+        "shared": {
+            "ln_attn": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(ks[2], cfg, dtype),
+            "ln_mlp": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype,
+                            cfg.mlp_variant),
+        },
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _shared_block(params: Params, cfg: ModelConfig, h: jax.Array,
+                  positions: jax.Array,
+                  cache: Optional[Tuple[jax.Array, jax.Array]],
+                  cache_index: Optional[jax.Array]
+                  ) -> Tuple[jax.Array, Any]:
+    sp = params["shared"]
+    a_in = rms_norm(h, sp["ln_attn"], cfg.norm_eps)
+    a_out, new_cache = attention_forward(
+        sp["attn"], cfg, a_in, positions, CAUSAL,
+        cache=cache, cache_index=cache_index)
+    h = h + a_out
+    m_in = rms_norm(h, sp["ln_mlp"], cfg.norm_eps)
+    return h + mlp_forward(sp["mlp"], m_in, cfg.activation), new_cache
+
+
+def hybrid_stack(params: Params, cfg: ModelConfig, h: jax.Array,
+                 positions: jax.Array,
+                 ssm_states: Optional[Any] = None,
+                 kv_caches: Optional[Any] = None,
+                 cache_index: Optional[jax.Array] = None,
+                 remat: bool = False
+                 ) -> Tuple[jax.Array, Any, Any]:
+    """Groups of `hybrid_attn_every` mamba layers, shared attention block
+    between groups; leftover layers (L mod every) form an attention-free
+    tail.  kv_caches: (k, v) [sites, B, T, Hkv, D]."""
+    every = cfg.hybrid_attn_every
+    sites = num_shared_sites(cfg)
+    head_n = sites * every
+    split = lambda t: (
+        jax.tree.map(lambda x: x[:head_n].reshape(
+            (sites, every) + x.shape[1:]), t),
+        jax.tree.map(lambda x: x[head_n:], t))
+    layers, tail_layers = split(params["layers"])
+    states = tail_states = None
+    if ssm_states is not None:
+        states, tail_states = split(ssm_states)
+
+    new_states, new_kv = [], []
+    for site in range(sites):
+        lp = jax.tree.map(lambda x: x[site], layers)
+        st = jax.tree.map(lambda x: x[site], states) \
+            if states is not None else None
+        h, nst = ssm_stack({"layers": lp}, cfg, h, st, remat=remat)
+        new_states.append(nst)
+        kv = None
+        if kv_caches is not None:
+            kv = (kv_caches[0][site], kv_caches[1][site])
+        h, nkv = _shared_block(params, cfg, h, positions, kv, cache_index)
+        new_kv.append(nkv)
+    if head_n < cfg.num_layers:
+        h, tail_new = ssm_stack({"layers": tail_layers}, cfg, h, tail_states,
+                                remat=remat)
+        if ssm_states is not None:
+            new_states.append(tail_new)
+    out_states = jax.tree.map(
+        lambda *xs: jnp.concatenate(list(xs), axis=0), *new_states) \
+        if ssm_states is not None else None
+    out_kv = None
+    if kv_caches is not None:
+        out_kv = (jnp.stack([c[0] for c in new_kv]),
+                  jnp.stack([c[1] for c in new_kv]))
+    return h, out_states, out_kv
+
+
+def hybrid_lm_loss(params: Params, cfg: ModelConfig,
+                   batch: Dict[str, jax.Array],
+                   remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(params, cfg, tokens)
+    h, _, _ = hybrid_stack(params, cfg, h, jnp.arange(s), remat=remat)
+    loss = next_token_loss(params, cfg, h, tokens, batch.get("loss_mask"))
+    return loss, loss
+
+
+def init_hybrid_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.float32):
+    sites = num_shared_sites(cfg)
+    conv, ssm = init_ssm_state(cfg, batch, dtype)
+    stack_l = lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape)
+    kv_shape = (sites, batch, max_len, cfg.num_kv_heads, cfg.hd)
+    return ((stack_l(conv), stack_l(ssm)),
+            (jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype)))
+
+
+def hybrid_decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                       ssm_states: Any, kv_caches: Any, index: jax.Array
+                       ) -> Tuple[jax.Array, Any, Any]:
+    h = embed_tokens(params, cfg, token)
+    h, ssm_states, kv_caches = hybrid_stack(
+        params, cfg, h, index[None], ssm_states, kv_caches, index)
+    return lm_logits(params, cfg, h), ssm_states, kv_caches

@@ -1,0 +1,30 @@
+"""Gated MLPs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Params, activation_fn, dense_init
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int,
+             dtype=jnp.float32, variant: str = "gated") -> Params:
+    ks = jax.random.split(key, 3)
+    if variant == "plain":
+        return {
+            "w_in": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_out": dense_init(ks[1], (d_ff, d_model), dtype),
+        }
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_forward(p: Params, x: jax.Array, activation: str = "silu"
+                ) -> jax.Array:
+    act = activation_fn(activation)
+    if "w_in" in p:
+        return act(x @ p["w_in"]) @ p["w_out"]
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

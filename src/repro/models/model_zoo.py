@@ -1,0 +1,152 @@
+"""Uniform Model interface over all 10 architecture families.
+
+    model = build_model(cfg)
+    params = model.init(rng, dtype)
+    loss, metrics = model.loss(params, batch)          # train
+    state = model.init_decode_state(params_or_none, batch, max_len, dtype)
+    state, logits = model.prefill(params, batch, state)
+    logits, state = model.decode_step(params, token, state, index)
+
+Decode state is a dict pytree — contents depend on family (KV caches for
+attention models, conv+ssm states for SSM, both for hybrids, plus encoder
+output for enc-dec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Params
+from . import encdec, hybrid, transformer, vlm
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    remat: bool = False          # per-layer activation rematerialisation
+
+    # ------------------------------------------------------------------ #
+    def init(self, rng: jax.Array, dtype=jnp.float32) -> Params:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            return transformer.init_lm(rng, cfg, dtype)
+        if cfg.family == "vlm":
+            return vlm.init_vlm(rng, cfg, dtype)
+        if cfg.family == "audio":
+            return encdec.init_encdec(rng, cfg, dtype)
+        if cfg.family == "hybrid":
+            return hybrid.init_hybrid_lm(rng, cfg, dtype)
+        if cfg.family == "ssm":
+            return hybrid.init_ssm_lm(rng, cfg, dtype)
+        raise ValueError(cfg.family)
+
+    def init_shape(self, dtype=jnp.float32) -> Params:
+        """ShapeDtypeStruct params (dry-run: no allocation)."""
+        return jax.eval_shape(
+            lambda: self.init(jax.random.PRNGKey(0), dtype))
+
+    # ------------------------------------------------------------------ #
+    def loss(self, params: Params, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            return transformer.lm_loss(params, cfg, batch, remat=self.remat)
+        if cfg.family == "vlm":
+            return vlm.vlm_loss(params, cfg, batch, remat=self.remat)
+        if cfg.family == "audio":
+            return encdec.encdec_loss(params, cfg, batch, remat=self.remat)
+        if cfg.family == "hybrid":
+            return hybrid.hybrid_lm_loss(params, cfg, batch,
+                                         remat=self.remat)
+        if cfg.family == "ssm":
+            return hybrid.ssm_lm_loss(params, cfg, batch, remat=self.remat)
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------------------ #
+    def init_decode_state(self, batch_size: int, max_len: int,
+                          dtype=jnp.float32) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return {"kv": transformer.init_kv_caches(
+                cfg, batch_size, max_len, dtype)}
+        if cfg.family == "audio":
+            return {"kv": transformer.init_kv_caches(
+                cfg, batch_size, max_len, dtype),
+                "enc_out": jnp.zeros(
+                    (batch_size, cfg.encoder_seq, cfg.d_model), dtype)}
+        if cfg.family == "hybrid":
+            ssm, kv = hybrid.init_hybrid_caches(
+                cfg, batch_size, max_len, dtype)
+            return {"ssm": ssm, "kv": kv}
+        if cfg.family == "ssm":
+            return {"ssm": hybrid.init_ssm_lm_states(cfg, batch_size, dtype)}
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------------------ #
+    def prefill(self, params: Params, batch: Dict[str, jax.Array],
+                state: Dict[str, Any]
+                ) -> Tuple[Dict[str, Any], jax.Array]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            kv, logits = transformer.lm_prefill(
+                params, cfg, batch["tokens"], state["kv"])
+            return {"kv": kv}, logits
+        if cfg.family == "vlm":
+            kv, logits = vlm.vlm_prefill(
+                params, cfg, batch["patch_embed"], batch["tokens"],
+                state["kv"])
+            return {"kv": kv}, logits
+        if cfg.family == "audio":
+            kv, enc_out, logits = encdec.encdec_prefill(
+                params, cfg, batch["audio_embed"], batch["tokens"],
+                state["kv"])
+            return {"kv": kv, "enc_out": enc_out}, logits
+        if cfg.family == "hybrid":
+            tokens = batch["tokens"]
+            h = transformer.embed_tokens(params, cfg, tokens)
+            h, ssm, kv = hybrid.hybrid_stack(
+                params, cfg, h, jnp.arange(tokens.shape[1]),
+                state["ssm"], state["kv"], jnp.zeros((), jnp.int32))
+            logits = transformer.lm_logits(params, cfg, h[:, -1:])
+            return {"ssm": ssm, "kv": kv}, logits
+        if cfg.family == "ssm":
+            tokens = batch["tokens"]
+            h = transformer.embed_tokens(params, cfg, tokens)
+            h, ssm = hybrid.ssm_stack(params, cfg, h, state["ssm"])
+            logits = transformer.lm_logits(params, cfg, h[:, -1:])
+            return {"ssm": ssm}, logits
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------------------ #
+    def decode_step(self, params: Params, token: jax.Array,
+                    state: Dict[str, Any], index: jax.Array
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            logits, kv = transformer.lm_decode_step(
+                params, cfg, token, state["kv"], index)
+            return logits, {"kv": kv}
+        if cfg.family == "vlm":
+            logits, kv = vlm.vlm_decode_step(
+                params, cfg, token, state["kv"], index)
+            return logits, {"kv": kv}
+        if cfg.family == "audio":
+            logits, kv = encdec.encdec_decode_step(
+                params, cfg, token, state["enc_out"], state["kv"], index)
+            return logits, {"kv": kv, "enc_out": state["enc_out"]}
+        if cfg.family == "hybrid":
+            logits, ssm, kv = hybrid.hybrid_decode_step(
+                params, cfg, token, state["ssm"], state["kv"], index)
+            return logits, {"ssm": ssm, "kv": kv}
+        if cfg.family == "ssm":
+            logits, ssm = hybrid.ssm_lm_decode_step(
+                params, cfg, token, state["ssm"])
+            return logits, {"ssm": ssm}
+        raise ValueError(cfg.family)
+
+
+def build_model(cfg: ModelConfig, remat: bool = False) -> Model:
+    return Model(cfg, remat=remat)

@@ -1,0 +1,299 @@
+"""Decoder-only transformer LM assembly (dense + MoE families).
+
+Layer parameters are stacked [L, ...] and the forward pass is a single
+`lax.scan` over layers.  Architectures with an alternating local/global
+attention pattern (gemma2) scan over layer *pairs* so each half of the pair
+gets its own static MaskSpec — mask structure must be static because the
+sliding-window blockwise path has a different loop shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (CAUSAL, MaskSpec, attention_forward, init_attention)
+from .common import (ModelConfig, Params, constrain,
+                     cross_entropy_loss, dense_init, rms_norm, softcap,
+                     stacked_init)
+from .mlp import init_mlp, mlp_forward
+from .moe import init_moe, moe_forward
+
+
+# ---------------------------------------------------------------------- #
+# layer
+# ---------------------------------------------------------------------- #
+
+def init_decoder_layer(key: jax.Array, cfg: ModelConfig,
+                       dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Params = {
+        "ln_attn": jnp.zeros((d,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln_mlp": jnp.zeros((d,), dtype),
+    }
+    if cfg.num_experts:
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, dtype, cfg.mlp_variant)
+    if cfg.sandwich_norm:
+        p["ln_attn_post"] = jnp.zeros((d,), dtype)
+        p["ln_mlp_post"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def decoder_layer(p: Params, cfg: ModelConfig, h: jax.Array,
+                  positions: jax.Array, spec: MaskSpec,
+                  cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  cache_positions: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (h, new_cache, moe_aux)."""
+    attn_in = rms_norm(h, p["ln_attn"], cfg.norm_eps)
+    attn_out, new_cache = attention_forward(
+        p["attn"], cfg, attn_in, positions, spec,
+        cache=cache, cache_index=cache_index,
+        cache_positions=cache_positions,
+        logit_cap=cfg.attn_logit_softcap)
+    if cfg.sandwich_norm:
+        attn_out = rms_norm(attn_out, p["ln_attn_post"], cfg.norm_eps)
+    h = h + attn_out
+    mlp_in = rms_norm(h, p["ln_mlp"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.num_experts:
+        mlp_out, aux = moe_forward(p["moe"], cfg, mlp_in)
+    else:
+        mlp_out = mlp_forward(p["mlp"], mlp_in, cfg.activation)
+    if cfg.sandwich_norm:
+        mlp_out = rms_norm(mlp_out, p["ln_mlp_post"], cfg.norm_eps)
+    return h + mlp_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------- #
+# full model
+# ---------------------------------------------------------------------- #
+
+def layer_specs(cfg: ModelConfig) -> Tuple[MaskSpec, ...]:
+    """Static per-position-in-pattern mask specs.  Period 2 for gemma2's
+    local/global alternation, else period 1."""
+    if cfg.local_global_pattern:
+        assert cfg.sliding_window, "local/global pattern needs a window"
+        return (MaskSpec(causal=True, window=cfg.sliding_window),
+                MaskSpec(causal=True))
+    return (MaskSpec(causal=True, window=cfg.sliding_window),)
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype,
+                            scale=0.02),
+        "layers": stacked_init(
+            ks[1], cfg.num_layers,
+            lambda k: init_decoder_layer(k, cfg, dtype)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def _reshape_period(tree: Params, period: int) -> Params:
+    """[L, ...] stacked params -> [L/period, period, ...]."""
+    return jax.tree.map(
+        lambda x: x.reshape((x.shape[0] // period, period) + x.shape[1:]),
+        tree)
+
+
+def decoder_stack(params: Params, cfg: ModelConfig, h: jax.Array,
+                  positions: jax.Array,
+                  caches: Optional[Any] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  cache_positions: Optional[jax.Array] = None,
+                  prefix_len: int = 0,
+                  remat: bool = False,
+                  ) -> Tuple[jax.Array, Any, jax.Array]:
+    """Scan the layer stack.  caches: stacked (k, v) [L, B, T, Hkv, D]."""
+    specs = layer_specs(cfg)
+    if prefix_len:
+        specs = tuple(
+            MaskSpec(causal=s.causal, window=s.window, prefix_len=prefix_len)
+            for s in specs)
+    period = len(specs)
+    layers = _reshape_period(params["layers"], period)
+    stacked_caches = None
+    if caches is not None:
+        stacked_caches = jax.tree.map(
+            lambda x: x.reshape((x.shape[0] // period, period) + x.shape[1:]),
+            caches)
+
+    layer_fn = decoder_layer
+    if remat:
+        layer_fn = jax.checkpoint(
+            decoder_layer,
+            static_argnums=(1, 4),
+            policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, xs):
+        hh, aux_sum = carry
+        lp, cc = xs
+        new_cc = []
+        for i, spec in enumerate(specs):
+            sub = jax.tree.map(lambda x: x[i], lp)
+            sub_cache = None
+            if cc is not None:
+                sub_cache = (cc[0][i], cc[1][i])
+            hh, ncache, aux = layer_fn(
+                sub, cfg, hh, positions, spec,
+                sub_cache, cache_index, cache_positions)
+            hh = constrain(hh, "residual")
+            new_cc.append(ncache)
+        if cc is not None:
+            out_cc = (jnp.stack([c[0] for c in new_cc]),
+                      jnp.stack([c[1] for c in new_cc]))
+        else:
+            out_cc = None
+        return (hh, aux_sum + aux), out_cc
+
+    (h, aux), new_caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)),
+        (layers, stacked_caches))
+    if new_caches is not None:
+        new_caches = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), new_caches)
+    return h, new_caches, aux
+
+
+def embed_tokens(params: Params, cfg: ModelConfig,
+                 tokens: jax.Array) -> jax.Array:
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        h = h * jnp.sqrt(cfg.d_model).astype(h.dtype)
+    return constrain(h, "residual")
+
+
+def lm_logits(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = constrain(h @ params["embed"].T, "logits")
+    else:
+        logits = h @ params["lm_head"]
+    logits = constrain(logits, "logits")
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+LOSS_CHUNK = 512   # sequence positions per logits chunk
+
+
+def next_token_loss(params: Params, cfg: ModelConfig, h: jax.Array,
+                    tokens: jax.Array,
+                    loss_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token cross-entropy WITHOUT materialising [B,S,V] logits: the
+    vocab projection + softcap + CE run chunked over the sequence, each
+    chunk rematerialised in the backward pass.  At 256k vocab the full fp32
+    logits are ~4 GiB/device; chunking caps live logits at LOSS_CHUNK/S of
+    that."""
+    b, s = tokens.shape
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((b, 1), -100, tokens.dtype)], axis=1)
+    if loss_mask is not None:
+        labels = jnp.where(loss_mask > 0, labels, -100)
+    c = min(LOSS_CHUNK, s)
+    pad = (-s) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    n = (s + pad) // c
+    h_c = jnp.moveaxis(h.reshape(b, n, c, h.shape[-1]), 1, 0)   # [n,B,c,d]
+    l_c = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)           # [n,B,c]
+
+    @jax.checkpoint
+    def chunk_nll(hc, lc):
+        logits = lm_logits(params, cfg, hc)                     # [B,c,V] f32
+        valid = lc != -100
+        safe = jnp.where(valid, lc, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        return ((logz - gold) * valid).sum(), valid.sum()
+
+    def body(carry, xs):
+        nll, cnt = carry
+        hc, lc = xs
+        dn, dc = chunk_nll(hc, lc)
+        return (nll + dn, cnt + dc), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (h_c, l_c))
+    return nll / jnp.maximum(cnt, 1)
+
+
+def lm_loss(params: Params, cfg: ModelConfig,
+            batch: Dict[str, jax.Array],
+            prefix_len: int = 0,
+            remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """batch: tokens [B,S] int32 (+ optional loss_mask [B,S]).
+    Next-token loss; MoE aux added with coefficient 0.01."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(s)
+    h, _, aux = decoder_stack(params, cfg, h, positions,
+                              prefix_len=prefix_len, remat=remat)
+    loss = next_token_loss(params, cfg, h, tokens,
+                           batch.get("loss_mask"))
+    return loss + 0.01 * aux, loss
+
+
+# ---------------------------------------------------------------------- #
+# serving
+# ---------------------------------------------------------------------- #
+
+def kv_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Sliding-window archs (uniform window, e.g. mixtral) only ever need
+    `window` rows — the ring buffer bounds decode memory at long context."""
+    if cfg.sliding_window and not cfg.local_global_pattern:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_kv_caches(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    clen = kv_cache_len(cfg, max_len)
+    shape = (cfg.num_layers, batch, clen, cfg.num_kv_heads, cfg.hd)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def lm_prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+               caches: Tuple[jax.Array, jax.Array],
+               prefix_len: int = 0) -> Tuple[Any, jax.Array]:
+    """Run the prompt through the stack, filling the caches from index 0.
+    Returns (caches, last-position logits)."""
+    b, s = tokens.shape
+    h = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(s)
+    h, caches, _ = decoder_stack(
+        params, cfg, h, positions, caches=caches,
+        cache_index=jnp.zeros((), jnp.int32), prefix_len=prefix_len)
+    return caches, lm_logits(params, cfg, h[:, -1:])
+
+
+def lm_decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                   caches: Tuple[jax.Array, jax.Array],
+                   index: jax.Array) -> Tuple[jax.Array, Any]:
+    """One-token decode.  token: [B,1]; index: scalar int32 absolute
+    position.  Ring-buffer caches (len < max positions, e.g. sliding-window
+    archs) wrap the write index; row positions mask wrapped/garbage rows.
+    Returns (logits [B,1,V], caches)."""
+    from .attention import ring_positions
+    h = embed_tokens(params, cfg, token)
+    positions = index[None] if index.ndim == 0 else index
+    clen = caches[0].shape[2]
+    widx = jnp.mod(index, clen)
+    cache_pos = ring_positions(index, clen)
+    h, caches, _ = decoder_stack(
+        params, cfg, h, positions, caches=caches, cache_index=widx,
+        cache_positions=cache_pos)
+    return lm_logits(params, cfg, h), caches

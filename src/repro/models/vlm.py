@@ -1,0 +1,62 @@
+"""VLM backbone (PaliGemma-style): SigLIP patch embeddings (STUB per the
+assignment — `input_specs()` provides precomputed [B, P, d] patch embeddings)
+prepended to text embeddings, processed by a gemma-style decoder with a
+prefix-LM mask (bidirectional over the image prefix, causal over text)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Params, cross_entropy_loss
+from .transformer import (decoder_stack, embed_tokens, init_kv_caches,
+                          init_lm, lm_logits, next_token_loss)
+
+
+def init_vlm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    # the language backbone owns all trainable params; the vision tower is
+    # stubbed (its output arrives as an input)
+    return init_lm(key, cfg, dtype)
+
+
+def vlm_loss(params: Params, cfg: ModelConfig,
+             batch: Dict[str, jax.Array],
+             remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """batch: patch_embed [B,P,d], tokens [B,S_text]."""
+    patches = batch["patch_embed"]
+    tokens = batch["tokens"]
+    b, p, _ = patches.shape
+    s = tokens.shape[1]
+    text = embed_tokens(params, cfg, tokens)
+    h = jnp.concatenate([patches.astype(text.dtype), text], axis=1)
+    positions = jnp.arange(p + s)
+    h, _, aux = decoder_stack(params, cfg, h, positions, prefix_len=p,
+                              remat=remat)
+    loss = next_token_loss(params, cfg, h[:, p:], tokens,
+                           batch.get("loss_mask"))
+    return loss + 0.01 * aux, loss
+
+
+def vlm_prefill(params: Params, cfg: ModelConfig, patches: jax.Array,
+                tokens: jax.Array, caches: Any) -> Tuple[Any, jax.Array]:
+    b, p, _ = patches.shape
+    s = tokens.shape[1]
+    text = embed_tokens(params, cfg, tokens)
+    h = jnp.concatenate([patches.astype(text.dtype), text], axis=1)
+    positions = jnp.arange(p + s)
+    h, caches, _ = decoder_stack(
+        params, cfg, h, positions, caches=caches,
+        cache_index=jnp.zeros((), jnp.int32), prefix_len=p)
+    return caches, lm_logits(params, cfg, h[:, -1:])
+
+
+def vlm_decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                    caches: Any, index: jax.Array
+                    ) -> Tuple[jax.Array, Any]:
+    """index counts from 0 at the first image patch."""
+    h = embed_tokens(params, cfg, token)
+    h, caches, _ = decoder_stack(
+        params, cfg, h, index[None], caches=caches, cache_index=index,
+        prefix_len=cfg.num_image_tokens)
+    return lm_logits(params, cfg, h), caches

@@ -1,0 +1,1 @@
+from .engine import Completion, Request, ServingEngine  # noqa: F401

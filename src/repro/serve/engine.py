@@ -1,0 +1,107 @@
+"""Batched serving engine: request queue -> padded batch -> prefill ->
+decode loop.  The end-to-end inference driver for examples/serve_lm.py.
+
+Serving style is static batching with greedy sampling (temperature
+optional): requests are grouped into batches of `batch_size`, prompts are
+left-padded to a common length, prefill fills the KV cache (ring-buffer
+bounded for sliding-window archs), then one decode_step per generated
+token.  Finished sequences are masked out (EOS or budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int = 32
+    extras: Optional[Dict[str, np.ndarray]] = None   # patch/audio embeds
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray
+    prompt_len: int
+    latency_s: float
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any, *, batch_size: int = 4,
+                 max_len: int = 512, eos_id: int = -1,
+                 dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.dtype = dtype
+        self.queue: List[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> List[Completion]:
+        done: List[Completion] = []
+        while self.queue:
+            batch = self.queue[:self.batch_size]
+            self.queue = self.queue[self.batch_size:]
+            done.extend(self._run_batch(batch))
+        return done
+
+    def _run_batch(self, reqs: Sequence[Request]) -> List[Completion]:
+        t0 = time.perf_counter()
+        bsz = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        budget = max(r.max_new_tokens for r in reqs)
+        # left-pad so the last prompt token is aligned at plen-1
+        toks = np.zeros((bsz, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt
+
+        cfg = self.model.cfg
+        prefix = cfg.num_image_tokens if cfg.family == "vlm" else 0
+        state = self.model.init_decode_state(
+            bsz, min(self.max_len, plen + prefix + budget + 1), self.dtype)
+        feed: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
+        if reqs[0].extras:
+            for k, v in reqs[0].extras.items():
+                feed[k] = jnp.stack(
+                    [jnp.asarray(r.extras[k]) for r in reqs])
+        state, logits = self._prefill(self.params, feed, state)
+
+        out = [list(r.prompt) for r in reqs]
+        alive = np.ones(bsz, bool)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for step in range(budget):
+            for i in range(bsz):
+                if alive[i]:
+                    t = int(tok[i, 0])
+                    out[i].append(t)
+                    if t == self.eos_id or \
+                            len(out[i]) - len(reqs[i].prompt) >= \
+                            reqs[i].max_new_tokens:
+                        alive[i] = False
+            if not alive.any() or step == budget - 1:
+                break
+            idx = jnp.asarray(plen + prefix + step, jnp.int32)
+            logits, state = self._decode(self.params, tok, state, idx)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+        dt = time.perf_counter() - t0
+        return [Completion(uid=r.uid, tokens=np.asarray(out[i], np.int32),
+                           prompt_len=len(r.prompt), latency_s=dt)
+                for i, r in enumerate(reqs)]

@@ -1,0 +1,98 @@
+"""TPU hardware model: v5e pod ICI torus + multi-pod DCN, roofline constants.
+
+The container targets TPU v5e (this is the TARGET platform; the runtime here
+is CPU).  Constants below feed the roofline analysis:
+
+    compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes / (chips * HBM_BW)
+    collective term = collective_bytes / (chips * ICI_BW per link)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.core.graph import DiGraph, Edge
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float      # per chip, FLOP/s
+    hbm_bw: float               # per chip, bytes/s
+    ici_link_bw: float          # per directed ICI link, bytes/s
+    dcn_bw_per_pod: float       # aggregate DCN bytes/s per pod
+    hbm_bytes: float            # per chip HBM capacity
+    vmem_bytes: float           # per core VMEM
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,           # ~50 GB/s per link per the assignment
+    dcn_bw_per_pod=200e9,       # 1.6 Tbit/s-class DCN per pod (model)
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 2 ** 20,
+)
+
+
+# ---------------------------------------------------------------------- #
+# Topology models for the schedule compiler
+# ---------------------------------------------------------------------- #
+
+def v5e_pod_topology(rows: int = 16, cols: int = 16,
+                     cap: int = 1) -> DiGraph:
+    """A v5e pod is a (wrapped) 2-D ICI torus; one capacity unit == one ICI
+    link (~50 GB/s).  Direct-connect: §2.2 edge splitting is a no-op here."""
+    from .zoo import torus_2d
+    g = torus_2d(rows, cols, cap=cap)
+    return DiGraph(g.num_nodes, g.compute, g.cap, f"v5e-{rows}x{cols}")
+
+
+def multipod_topology(num_pods: int = 2, nodes_per_pod: int = 4,
+                      ici_cap: int = 10, dcn_cap: int = 1) -> DiGraph:
+    """Pod-level multi-pod model: per-pod ICI modelled as a local switch with
+    fat links (ici_cap per node), pods joined through a DCN switch with
+    dcn_cap per node.  Structurally identical to the paper's Fig 1a — the
+    cluster cut is the bottleneck, and edge splitting beats ring unwinding
+    by ici_cap/... (4x in the paper's numbers).
+
+    Node ids: compute 0..P*n-1, DCN switch = P*n, pod switches follow."""
+    n = num_pods * nodes_per_pod
+    dcn = n
+    edges: Dict[Edge, int] = {}
+    for p in range(num_pods):
+        sw = n + 1 + p
+        for i in range(nodes_per_pod):
+            h = p * nodes_per_pod + i
+            edges[(h, sw)] = ici_cap
+            edges[(sw, h)] = ici_cap
+    for h in range(n):
+        edges[(h, dcn)] = dcn_cap
+        edges[(dcn, h)] = dcn_cap
+    return DiGraph(n + 1 + num_pods, frozenset(range(n)), edges,
+                   f"multipod[{num_pods}x{nodes_per_pod},{ici_cap}/{dcn_cap}]")
+
+
+def axis_topology_for_mesh(axis_name: str, axis_size: int) -> DiGraph:
+    """Physical topology model for one mesh axis.
+
+    On a 2-D ICI torus laid out as (data, model) = (16, 16), each mesh axis
+    maps to torus rings: an axis of size A is a bidirectional ring of A chips
+    (2 ICI links each way between neighbours along that axis are available
+    to the axis' collectives — we model cap=1 per direction and scale by
+    link bandwidth at cost time).  The 'pod' axis crosses DCN: modelled as a
+    switch star with 1 unit per pod (skinny), which is where the paper's
+    edge splitting matters.
+    """
+    from .zoo import bidir_ring, star_switch
+    if axis_size == 1:
+        return DiGraph(1, frozenset({0}), {}, f"{axis_name}-trivial")
+    if axis_name == "pod":
+        if axis_size == 2:
+            # 2 pods: direct bidirectional DCN pipe
+            return DiGraph(2, frozenset({0, 1}), {(0, 1): 1, (1, 0): 1},
+                           "pod-pipe")
+        return star_switch(axis_size, cap=1)
+    return bidir_ring(axis_size, cap=1, name=f"{axis_name}-ring{axis_size}")

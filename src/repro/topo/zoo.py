@@ -1,0 +1,201 @@
+"""Topology zoo — every topology family the paper discusses plus TPU shapes.
+
+All constructors return `DiGraph` with integer capacities.  Compute nodes are
+always numbered first (0..N-1), switches after, so compute node ids coincide
+with device/rank ids in the runtime.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.graph import DiGraph, Edge
+
+
+# ---------------------------------------------------------------------- #
+# direct-connect basics
+# ---------------------------------------------------------------------- #
+
+def ring(n: int, cap: int = 1, name: str | None = None) -> DiGraph:
+    """Unidirectional ring 0 -> 1 -> ... -> n-1 -> 0."""
+    edges = {(i, (i + 1) % n): cap for i in range(n)}
+    return DiGraph(n, frozenset(range(n)), edges, name or f"ring{n}")
+
+
+def bidir_ring(n: int, cap: int = 1, name: str | None = None) -> DiGraph:
+    edges: Dict[Edge, int] = {}
+    for i in range(n):
+        edges[(i, (i + 1) % n)] = cap
+        edges[((i + 1) % n, i)] = cap
+    return DiGraph(n, frozenset(range(n)), edges, name or f"bring{n}")
+
+
+def line(n: int, cap: int = 1) -> DiGraph:
+    """Bidirectional path graph — the pathological non-symmetric case."""
+    edges: Dict[Edge, int] = {}
+    for i in range(n - 1):
+        edges[(i, i + 1)] = cap
+        edges[(i + 1, i)] = cap
+    return DiGraph(n, frozenset(range(n)), edges, f"line{n}")
+
+
+def fully_connected(n: int, cap: int = 1) -> DiGraph:
+    edges = {(i, j): cap for i in range(n) for j in range(n) if i != j}
+    return DiGraph(n, frozenset(range(n)), edges, f"full{n}")
+
+
+def torus_2d(rows: int, cols: int, cap: int = 1,
+             wrap: bool = True) -> DiGraph:
+    """2-D (wrapped) torus — the TPU ICI shape.  Bidirectional links."""
+    n = rows * cols
+
+    def nid(r: int, c: int) -> int:
+        return (r % rows) * cols + (c % cols)
+
+    edges: Dict[Edge, int] = {}
+    for r in range(rows):
+        for c in range(cols):
+            u = nid(r, c)
+            nbrs = []
+            if wrap or c + 1 < cols:
+                nbrs.append(nid(r, c + 1))
+            if wrap or r + 1 < rows:
+                nbrs.append(nid(r + 1, c))
+            for v in nbrs:
+                if u == v:
+                    continue
+                edges[(u, v)] = edges.get((u, v), 0) + cap
+                edges[(v, u)] = edges.get((v, u), 0) + cap
+    return DiGraph(n, frozenset(range(n)), edges,
+                   f"torus{rows}x{cols}" + ("" if wrap else "-mesh"))
+
+
+def torus_3d(x: int, y: int, z: int, cap: int = 1) -> DiGraph:
+    n = x * y * z
+
+    def nid(i: int, j: int, kk: int) -> int:
+        return ((i % x) * y + (j % y)) * z + (kk % z)
+
+    edges: Dict[Edge, int] = {}
+    for i in range(x):
+        for j in range(y):
+            for kk in range(z):
+                u = nid(i, j, kk)
+                for v in (nid(i + 1, j, kk), nid(i, j + 1, kk),
+                          nid(i, j, kk + 1)):
+                    if u == v:
+                        continue
+                    edges[(u, v)] = edges.get((u, v), 0) + cap
+                    edges[(v, u)] = edges.get((v, u), 0) + cap
+    return DiGraph(n, frozenset(range(n)), edges, f"torus{x}x{y}x{z}")
+
+
+# ---------------------------------------------------------------------- #
+# switch topologies
+# ---------------------------------------------------------------------- #
+
+def star_switch(n: int, cap: int = 1) -> DiGraph:
+    """n compute nodes hanging off one switch (id n)."""
+    edges: Dict[Edge, int] = {}
+    for i in range(n):
+        edges[(i, n)] = cap
+        edges[(n, i)] = cap
+    return DiGraph(n + 1, frozenset(range(n)), edges, f"star{n}")
+
+
+def two_cluster_switch(per_cluster: int = 4, local_cap: int = 10,
+                       global_cap: int = 1) -> DiGraph:
+    """The paper's Figure 1a: two clusters of `per_cluster` compute nodes,
+    one local switch per cluster (local_cap links), one global switch
+    (global_cap links per node).  Bottleneck = the cluster cut."""
+    n = 2 * per_cluster
+    g_sw = n          # global switch v0
+    sw1 = n + 1       # cluster-1 switch v1
+    sw2 = n + 2       # cluster-2 switch v2
+    edges: Dict[Edge, int] = {}
+    for i in range(per_cluster):
+        edges[(i, sw1)] = local_cap
+        edges[(sw1, i)] = local_cap
+    for i in range(per_cluster, n):
+        edges[(i, sw2)] = local_cap
+        edges[(sw2, i)] = local_cap
+    for i in range(n):
+        edges[(i, g_sw)] = global_cap
+        edges[(g_sw, i)] = global_cap
+    return DiGraph(n + 3, frozenset(range(n)), edges,
+                   f"fig1a[{per_cluster}x2,{local_cap}/{global_cap}]")
+
+
+def fig1a() -> DiGraph:
+    """Paper Figure 1a with b = 1."""
+    return two_cluster_switch(4, 10, 1)
+
+
+def fig1d_ring_unwound() -> DiGraph:
+    """Paper Figure 1d: the *suboptimal* TACCL/TACOS-style unwinding of
+    Fig 1a into directed rings (each node's switch egress feeds the next
+    node's ingress).  Local switches become intra-cluster rings (cap 10),
+    the global switch one global ring (cap 1).  The bottleneck cut's egress
+    drops from 4b to b — 4x worse (paper §2 discussion)."""
+    edges: Dict[Edge, int] = {}
+    for base in (0, 4):  # intra-cluster directed rings, cap 10
+        for i in range(4):
+            u = base + i
+            v = base + (i + 1) % 4
+            edges[(u, v)] = edges.get((u, v), 0) + 10
+    for i in range(8):   # global directed ring, cap 1
+        u, v = i, (i + 1) % 8
+        edges[(u, v)] = edges.get((u, v), 0) + 1
+    return DiGraph(8, frozenset(range(8)), edges, "fig1d-ring-unwound")
+
+
+def fat_tree(pods: int = 4, leaf_per_pod: int = 2, hosts_per_leaf: int = 2,
+             host_cap: int = 1, up_cap: int | None = None) -> DiGraph:
+    """Two-level fat tree: hosts -> leaf switches -> spine switches.
+    TACCL/TACOS cannot handle multi-switch fabrics like this (paper §2);
+    edge splitting removes every switch exactly."""
+    n_hosts = pods * leaf_per_pod * hosts_per_leaf
+    up_cap = up_cap if up_cap is not None else hosts_per_leaf * host_cap
+    n_leaf = pods * leaf_per_pod
+    spine = n_hosts + n_leaf  # one spine switch (folded core)
+    edges: Dict[Edge, int] = {}
+    for h in range(n_hosts):
+        leaf = n_hosts + h // hosts_per_leaf
+        edges[(h, leaf)] = host_cap
+        edges[(leaf, h)] = host_cap
+    for l in range(n_leaf):
+        leaf = n_hosts + l
+        edges[(leaf, spine)] = up_cap
+        edges[(spine, leaf)] = up_cap
+    return DiGraph(n_hosts + n_leaf + 1, frozenset(range(n_hosts)), edges,
+                   f"fattree[{pods}p{leaf_per_pod}l{hosts_per_leaf}h]")
+
+
+def dragonfly(groups: int = 3, per_group: int = 2, local_cap: int = 4,
+              global_cap: int = 1) -> DiGraph:
+    """Dragonfly-lite: per-group router (switch) with all-to-all global links
+    between routers; compute nodes hang off their group router."""
+    n = groups * per_group
+    edges: Dict[Edge, int] = {}
+    for g in range(groups):
+        router = n + g
+        for i in range(per_group):
+            h = g * per_group + i
+            edges[(h, router)] = local_cap
+            edges[(router, h)] = local_cap
+    for g1 in range(groups):
+        for g2 in range(groups):
+            if g1 != g2:
+                edges[(n + g1, n + g2)] = global_cap
+    return DiGraph(n + groups, frozenset(range(n)), edges,
+                   f"dragonfly[{groups}x{per_group}]")
+
+
+def dgx_box(n: int = 8, nvlink_cap: int = 12, nic_cap: int = 1) -> DiGraph:
+    """A DGX-like box: fully-connected NVLink between n GPUs + a NIC switch
+    (models the egress bottleneck when boxes join a fabric)."""
+    edges = {(i, j): nvlink_cap for i in range(n) for j in range(n) if i != j}
+    sw = n
+    for i in range(n):
+        edges[(i, sw)] = nic_cap
+        edges[(sw, i)] = nic_cap
+    return DiGraph(n + 1, frozenset(range(n)), edges, f"dgx{n}")

@@ -1,0 +1,131 @@
+"""Fault tolerance: supervised training loop with checkpoint/restart,
+straggler detection, and an elastic re-mesh plan.
+
+At thousand-node scale the assumptions are: (a) some host WILL fail
+mid-run, (b) some host WILL run slow (thermal, network), (c) the replacement
+cluster may have a different device count.  The pieces here:
+
+* `TrainSupervisor.run` — steps the train function, checkpoints every
+  `ckpt_every` (async), and on any exception restores the latest checkpoint
+  and continues (`max_restarts` budget).  Data is a pure function of step,
+  so resume is bitwise-deterministic.
+* `StragglerMonitor` — EWMA of step wall-time; flags steps slower than
+  `threshold`× the running mean.  On TPU pods the mitigation is re-shard /
+  exclude via the elastic plan below (here: logged + counted, hook exposed).
+* `elastic_plan` — given old/new device counts, emits the re-mesh shape and
+  whether the global batch must be re-split; checkpoint restore +
+  device_put with the new NamedSharding completes the elastic restart
+  (checkpoints are host-side full arrays, so any mesh can load them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from . import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.2
+    threshold: float = 2.0
+    ewma: Optional[float] = None
+    flagged: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    on_straggler: Optional[Callable[[int, float], None]] = None
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = (self.ewma is not None
+                        and dt > self.threshold * self.ewma)
+        if is_straggler:
+            self.flagged.append((step, dt))
+            if self.on_straggler:
+                self.on_straggler(step, dt)
+        # EWMA excludes outliers so one straggler doesn't mask the next
+        if not is_straggler:
+            self.ewma = dt if self.ewma is None else \
+                (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+def elastic_plan(old_devices: int, new_devices: int, global_batch: int,
+                 model_parallel: int) -> Dict[str, Any]:
+    """Re-mesh plan after losing/gaining hosts.  Keeps model parallelism
+    fixed (param layout survives), resizes the data axis, and adjusts
+    microbatching so the global batch is preserved when divisibility
+    allows."""
+    if new_devices % model_parallel:
+        raise ValueError(
+            f"{new_devices} devices cannot keep model_parallel="
+            f"{model_parallel}")
+    new_data = new_devices // model_parallel
+    plan = {
+        "mesh_shape": (new_data, model_parallel),
+        "data_axis": new_data,
+        "global_batch": global_batch,
+        "microbatch_scale": 1,
+    }
+    if global_batch % new_data:
+        # keep global batch by accumulating: smallest integer scale s.t.
+        # (global_batch / micro) divides the data axis
+        scale = math.lcm(new_data, global_batch) // global_batch
+        plan["microbatch_scale"] = scale
+    return plan
+
+
+@dataclasses.dataclass
+class TrainSupervisor:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_restarts: int = 3
+    monitor: StragglerMonitor = dataclasses.field(
+        default_factory=StragglerMonitor)
+
+    def run(self, *, state: Any, num_steps: int,
+            step_fn: Callable[[int, Any], Tuple[Any, Dict[str, Any]]],
+            start_step: int = 0,
+            log_every: int = 10,
+            log: Callable[[str], None] = print) -> Tuple[Any, int]:
+        """step_fn(step, state) -> (state, metrics).  Returns final state.
+
+        Any exception triggers restore-from-latest + replay (data is pure
+        in step, so replayed steps are identical)."""
+        step = start_step
+        restarts = 0
+        while step < num_steps:
+            try:
+                t0 = time.perf_counter()
+                state, metrics = step_fn(step, state)
+                dt = time.perf_counter() - t0
+                if self.monitor.observe(step, dt):
+                    log(f"[ft] straggler at step {step}: {dt:.3f}s "
+                        f"(ewma {self.monitor.ewma:.3f}s)")
+                if log_every and step % log_every == 0:
+                    loss = metrics.get("loss")
+                    log(f"step {step}: loss={float(loss):.4f} dt={dt:.3f}s"
+                        if loss is not None else f"step {step}: dt={dt:.3f}s")
+                step += 1
+                if step % self.ckpt_every == 0 or step == num_steps:
+                    ckpt.save_async(self.ckpt_dir, step, state)
+                    ckpt.gc_old(self.ckpt_dir, self.keep)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # noqa: BLE001 — any failure: restart
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts") from e
+                ckpt.wait_pending()
+                last = ckpt.latest_step(self.ckpt_dir)
+                if last is None:
+                    raise RuntimeError("failure before first checkpoint") \
+                        from e
+                log(f"[ft] step {step} failed ({type(e).__name__}: {e}); "
+                    f"restoring step {last} (restart {restarts}/"
+                    f"{self.max_restarts})")
+                state, step = ckpt.restore(self.ckpt_dir, state), last
+                state = state[0]
+        ckpt.wait_pending()
+        return state, step

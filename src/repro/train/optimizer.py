@@ -1,0 +1,106 @@
+"""AdamW on parameter pytrees (no optax dependency).
+
+State leaves (`mu`, `nu`) mirror the parameter tree, so any parameter
+PartitionSpec applies verbatim to the optimizer state; ZeRO-1 additionally
+shards them along the data axis (launch/sharding.py decides the specs —
+this module is sharding-agnostic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+    # f32 master copy when the live params are bf16 ("mixed-precision
+    # optimizer" layout — perf iteration B1: grads then reduce in bf16,
+    # halving DP gradient wire bytes).  None => params are the master.
+    master: Optional[Params] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def init_adamw(params: Params, keep_master: bool = False) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \
+        if keep_master else None
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Params, state: AdamWState,
+                 params: Params) -> Tuple[Params, AdamWState, Dict[str, Any]]:
+    """One AdamW step with global-norm clipping and decoupled weight decay.
+    When state.master is set, the f32 master is updated and the (bf16)
+    params are re-derived from it.  Returns (new_params, new_state,
+    metrics)."""
+    base = state.master if state.master is not None else params
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    step = state.step + 1
+    lr = lr_schedule(cfg, state.step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / b1c
+        nu_hat = nu / b2c
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) \
+            if p.ndim >= 2 else 0.0   # no decay on norms/biases
+        new_p = p.astype(jnp.float32) - lr * (delta + decay)
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(base)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_base = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    if state.master is not None:
+        new_params = jax.tree.map(
+            lambda b, p: b.astype(p.dtype), new_base, params)
+        return new_params, AdamWState(step, new_mu, new_nu,
+                                      new_base), metrics
+    return new_base, AdamWState(step, new_mu, new_nu), metrics

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no global XLA_FLAGS here — smoke tests must see
+one device; multi-device collective tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,68 @@
+"""HLO counting: trip-adjusted flops/bytes/collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_count import count, parse_hlo
+from repro.analysis.roofline import RooflineTerms, model_flops_for
+from repro.configs import get_config, shape_by_name
+
+
+def test_scan_trip_adjustment():
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=8)
+        return out
+
+    def unrolled(x, w):
+        for _ in range(8):
+            x = x @ w
+        return x
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    fs = count(jax.jit(scanned).lower(x, w).compile().as_text())["flops"]
+    fu = count(jax.jit(unrolled).lower(x, w).compile().as_text())["flops"]
+    assert fs == fu == 2 * 128 ** 3 * 8
+
+
+def test_remat_grad_flops():
+    def loss(w, x):
+        def body(c, _):
+            return jax.nn.relu(c @ w), None
+        out, _ = jax.lax.scan(jax.checkpoint(body), x, None, length=4)
+        return out.sum()
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    f = count(jax.jit(jax.grad(loss)).lower(w, x).compile().as_text())["flops"]
+    # fwd 4 + remat 4 + bwd 8 = 16 matmuls
+    assert f == 2 * 64 ** 3 * 16
+
+
+def test_roofline_terms():
+    t = RooflineTerms(arch="x", shape="train_4k", mesh="16x16", chips=256,
+                      hlo_flops=197e12, hlo_bytes=819e9,
+                      collective_bytes={"all-reduce": int(100e9)},
+                      model_flops=197e12 * 256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    assert t.useful_flops_ratio == pytest.approx(1.0)
+
+
+def test_model_flops_kinds():
+    cfg = get_config("qwen3-8b")
+    tr = model_flops_for(cfg, shape_by_name("train_4k"))
+    pf = model_flops_for(cfg, shape_by_name("prefill_32k"))
+    dc = model_flops_for(cfg, shape_by_name("decode_32k"))
+    assert tr == 3 * pf            # 6ND vs 2ND at equal token count
+    assert dc < pf / 1000          # decode: one token per sequence
+
+
+def test_moe_active_flops():
+    moe = get_config("mixtral-8x7b")
+    dense_equiv = moe.param_count()
+    active = moe.active_param_count()
+    assert active < dense_equiv / 2     # top-2 of 8 experts

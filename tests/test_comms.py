@@ -1,0 +1,142 @@
+"""Multi-device execution of the tree-pipeline collectives vs JAX oracles.
+
+Each test spawns a subprocess with XLA_FLAGS=--xla_force_host_platform_
+device_count=8 (the main pytest process must keep seeing ONE device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_snippet(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
+    return out.stdout
+
+
+def test_tree_collectives_match_references():
+    print(run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.topo import bidir_ring, fig1a, ring
+        from repro.core.schedule import compile_allgather, compile_reduce_scatter
+        from repro.comms import compile_program, tree_all_gather, \\
+            tree_reduce_scatter, tree_all_reduce
+
+        mesh = Mesh(np.array(jax.devices()), ('x',))
+        for topo in (bidir_ring(8), fig1a(), ring(8)):
+            ag = compile_program(compile_allgather(topo, num_chunks=4))
+            rs = compile_program(compile_reduce_scatter(topo, num_chunks=4))
+            x = jax.random.normal(jax.random.PRNGKey(0), (8, 13))
+            f = jax.jit(shard_map(lambda v: tree_all_gather(v[0], ag, 'x'),
+                                  mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+            got = f(x).reshape(8, 8, 13)
+            assert np.allclose(got, np.broadcast_to(x[None], (8, 8, 13)),
+                               atol=1e-5), topo.name
+            h = jax.jit(shard_map(
+                lambda v: tree_all_reduce(v[0], rs, ag, 'x')[None],
+                mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+            got = h(x)
+            assert np.allclose(got, np.broadcast_to(x.sum(0), (8, 13)),
+                               atol=1e-4), topo.name
+            y = jnp.arange(8 * 8 * 4, dtype=jnp.float32).reshape(8, 32)
+            g = jax.jit(shard_map(
+                lambda v: tree_reduce_scatter(v[0].reshape(8, 4), rs, 'x'),
+                mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+            assert np.allclose(g(y), y.sum(0).reshape(8, 4)), topo.name
+            print('OK', topo.name)
+    """))
+
+
+def test_multi_axis_hierarchical_allreduce():
+    print(run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.comms.mesh_axes import CollectiveContext
+        from repro.comms.collectives import tree_all_reduce_multi
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ('pod', 'data'))
+        ctx = CollectiveContext({'pod': 2, 'data': 4}, num_chunks=4)
+        progs = ctx.allreduce_programs(('pod', 'data'))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 11))
+        f = jax.jit(shard_map(
+            lambda v: tree_all_reduce_multi(v[0], progs)[None],
+            mesh=mesh, in_specs=P(('pod', 'data')),
+            out_specs=P(('pod', 'data'))))
+        got = f(x)
+        assert np.allclose(got, np.broadcast_to(x.sum(0), (8, 11)), atol=1e-4)
+        print('OK multi-axis', ctx.describe())
+    """))
+
+
+def test_bf16_reduce_scatter_f32_accumulation():
+    print(run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.topo import bidir_ring
+        from repro.core.schedule import compile_reduce_scatter
+        from repro.comms import compile_program, tree_reduce_scatter
+
+        mesh = Mesh(np.array(jax.devices()), ('x',))
+        rs = compile_program(compile_reduce_scatter(bidir_ring(8),
+                                                    num_chunks=4))
+        y = (jax.random.normal(jax.random.PRNGKey(2), (8, 8, 16)) * 100
+             ).astype(jnp.bfloat16)
+        g = jax.jit(shard_map(
+            lambda v: tree_reduce_scatter(v[0], rs, 'x'),
+            mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+        got = g(y.reshape(8, -1)).reshape(8, 16)
+        ref = y.astype(jnp.float32).sum(0).reshape(8, 16)
+        err = np.abs(np.asarray(got, np.float32) - np.asarray(ref)).max()
+        rel = err / np.abs(np.asarray(ref)).max()
+        assert rel < 2e-2, rel   # f32 accumulation keeps bf16 inputs sane
+        print('OK bf16 accum, rel err', rel)
+    """))
+
+
+def test_bucketed_overlap_allreduce():
+    print(run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.topo import bidir_ring
+        from repro.core.schedule import compile_allgather, \\
+            compile_reduce_scatter
+        from repro.comms import compile_program
+        from repro.comms.overlap import BucketedAllReduce, partition_buckets
+
+        mesh = Mesh(np.array(jax.devices()), ('x',))
+        topo = bidir_ring(8)
+        red = BucketedAllReduce(
+            rs_prog=compile_program(compile_reduce_scatter(topo, num_chunks=4)),
+            ag_prog=compile_program(compile_allgather(topo, num_chunks=4)),
+            axis_name='x', bucket_bytes=1 << 10)
+        grads = {'a': jax.random.normal(jax.random.PRNGKey(0), (8, 64)),
+                 'b': jax.random.normal(jax.random.PRNGKey(1), (128,)),
+                 'c': jax.random.normal(jax.random.PRNGKey(2), (4, 4))}
+        assert len(partition_buckets(grads, 1 << 10)) >= 2
+        def f(g):
+            g = jax.tree.map(lambda x: x[0], g)
+            return jax.tree.map(lambda x: x[None], red(g))
+        per_dev = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (8,) + x.shape), grads)
+        got = jax.jit(shard_map(f, mesh=mesh,
+                                in_specs=P('x'), out_specs=P('x')))(per_dev)
+        for k in grads:
+            want = grads[k] * 8
+            err = np.abs(np.asarray(got[k][0]) - np.asarray(want)).max()
+            assert err < np.abs(np.asarray(want)).max() * 2e-2, (k, err)
+        print('OK bucketed overlap allreduce')
+    """))

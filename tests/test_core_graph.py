@@ -1,0 +1,219 @@
+"""Unit + property tests for the paper's core: maxflow, optimality search,
+edge splitting, arborescence packing."""
+import math
+from fractions import Fraction
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DiGraph, FlowNetwork, allgather_inv_xstar,
+                        brute_force_inv_xstar, choose_U_k, max_tree_depth,
+                        oracle_feasible, pack_arborescences, pack_rooted_trees,
+                        remove_switches, simplest_between, solve_fixed_k,
+                        solve_optimality, trivial_split, verify_packing,
+                        expand_paths)
+from repro.core.edge_split import _oracle_holds
+from repro.topo import (bidir_ring, dgx_box, dragonfly, fat_tree, fig1a,
+                        fig1d_ring_unwound, fully_connected, ring, star_switch,
+                        torus_2d, two_cluster_switch)
+
+
+# ---------------------------------------------------------------------- #
+# maxflow
+# ---------------------------------------------------------------------- #
+
+def _random_digraph(rng, n, p, max_cap=9):
+    edges = {}
+    for u in range(n):
+        for v in range(n):
+            if u != v and rng.random() < p:
+                edges[(u, v)] = int(rng.integers(1, max_cap + 1))
+    return edges
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_dinic_matches_networkx(seed):
+    rng = np.random.default_rng(seed)
+    n = 8
+    edges = _random_digraph(rng, n, 0.4)
+    if not edges:
+        pytest.skip("empty graph")
+    net = FlowNetwork(n)
+    g = nx.DiGraph()
+    for (u, v), c in edges.items():
+        net.add_edge(u, v, c)
+        g.add_edge(u, v, capacity=c)
+    for (s, t) in [(0, n - 1), (1, 2), (3, 0)]:
+        want = nx.maximum_flow_value(g, s, t) if g.has_node(s) and \
+            g.has_node(t) and s in g and t in g else 0
+        try:
+            want = nx.maximum_flow_value(g, s, t)
+        except nx.NetworkXError:
+            want = 0
+        assert net_copy(edges, n).maxflow(s, t) == want
+
+
+def net_copy(edges, n):
+    net = FlowNetwork(n)
+    for (u, v), c in edges.items():
+        net.add_edge(u, v, c)
+    return net
+
+
+def test_maxflow_limit_early_exit():
+    net = FlowNetwork(2)
+    net.add_edge(0, 1, 1000)
+    assert net.maxflow(0, 1, limit=7) == 7
+
+
+# ---------------------------------------------------------------------- #
+# simplest_between (Prop 2 recovery)
+# ---------------------------------------------------------------------- #
+
+@given(st.fractions(min_value=0, max_value=50, max_denominator=200),
+       st.fractions(min_value=0, max_value=50, max_denominator=200))
+@settings(max_examples=80, deadline=None)
+def test_simplest_between_in_interval(a, b):
+    lo, hi = min(a, b), max(a, b)
+    r = simplest_between(lo, hi)
+    assert lo <= r <= hi
+    # minimality of denominator (r.denominator <= 200 by construction:
+    # endpoints have denominator <= 200 and r is the simplest in between)
+    for den in range(1, r.denominator):
+        lo_num = math.ceil(lo * den)
+        assert lo_num > hi * den, \
+            f"{lo_num}/{den} in [{lo},{hi}] beats {r}"
+
+
+# ---------------------------------------------------------------------- #
+# optimality binary search == brute force (property, random Eulerian)
+# ---------------------------------------------------------------------- #
+
+def _random_eulerian(seed, n_compute=4, n_switch=1, max_cap=4):
+    """Random Eulerian digraph built from random directed cycles (cycle
+    sums are always Eulerian), guaranteeing compute-node reachability."""
+    rng = np.random.default_rng(seed)
+    n = n_compute + n_switch
+    edges = {}
+    nodes = list(range(n))
+    # a base cycle through everything keeps it connected
+    cycles = [nodes[:]]
+    for _ in range(int(rng.integers(1, 5))):
+        k = int(rng.integers(2, n + 1))
+        cyc = list(rng.choice(n, size=k, replace=False))
+        cycles.append(cyc)
+    for cyc in cycles:
+        cap = int(rng.integers(1, max_cap + 1))
+        for i in range(len(cyc)):
+            u, v = int(cyc[i]), int(cyc[(i + 1) % len(cyc)])
+            if u != v:
+                edges[(u, v)] = edges.get((u, v), 0) + cap
+    return DiGraph(n, frozenset(range(n_compute)), edges, f"rand{seed}")
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_optimality_matches_brute_force(seed):
+    g = _random_eulerian(seed)
+    got = allgather_inv_xstar(g)
+    want = brute_force_inv_xstar(g)
+    assert got == want, f"{g.name}: search {got} != brute {want}"
+
+
+def test_fig1a_matches_paper():
+    g = fig1a()
+    opt = solve_optimality(g)
+    # paper §2.1: 1/x* = 4/4b = 1 (b=1), U = 1, k = 1
+    assert opt.inv_x_star == 1
+    assert opt.U == 1
+    assert opt.k == 1
+
+
+def test_fig1d_ring_unwinding_is_4x_worse():
+    assert allgather_inv_xstar(fig1d_ring_unwound()) == 4
+    assert allgather_inv_xstar(fig1a()) == 1
+
+
+@pytest.mark.parametrize("make,expect", [
+    (lambda: ring(4), Fraction(3)),
+    (lambda: ring(8), Fraction(7)),
+    (lambda: fully_connected(4), Fraction(1)),
+    (lambda: star_switch(4), Fraction(3)),
+    (lambda: torus_2d(2, 2), Fraction(3, 4)),
+])
+def test_known_optima(make, expect):
+    assert allgather_inv_xstar(make()) == expect
+
+
+# ---------------------------------------------------------------------- #
+# edge splitting invariants (Theorem 7/8)
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(10))
+def test_edge_split_preserves_invariants(seed):
+    g = _random_eulerian(seed, n_compute=4, n_switch=2)
+    if not any(w in e for e in g.cap for w in g.switches):
+        pytest.skip("no switch edges")
+    opt = solve_optimality(g)
+    scaled = g.scaled(opt.U)
+    res = remove_switches(scaled, opt.k, verify=True)
+    star = res.graph
+    assert star.is_eulerian()
+    assert not any(w in e for e in star.cap for w in star.switches)
+    assert _oracle_holds(star, opt.k)
+    # path expansion is an exact flow decomposition
+    paths = expand_paths(res)
+    for (u, t), plist in paths.items():
+        assert sum(c for _, c in plist) == star.cap[(u, t)]
+        for path, _ in plist:
+            assert path[0] == u and path[-1] == t
+            assert all(w in res.original.switches for w in path[1:-1])
+
+
+@pytest.mark.parametrize("make", [fig1a, fat_tree, dragonfly, dgx_box,
+                                  lambda: two_cluster_switch(3, 5, 1)])
+def test_edge_split_zoo(make):
+    g = make()
+    opt = solve_optimality(g)
+    res = remove_switches(g.scaled(opt.U), opt.k, verify=True)
+    # optimal runtime unchanged on the logical graph (scaled by U)
+    star_inv = allgather_inv_xstar(res.graph)
+    assert star_inv * opt.U == opt.inv_x_star * 1, \
+        f"{g.name}: D* optimum {star_inv} vs {opt.inv_x_star}/U"
+
+
+# ---------------------------------------------------------------------- #
+# arborescence packing (Theorem 9-12)
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(10))
+def test_packing_random_direct_graphs(seed):
+    g = _random_eulerian(seed, n_compute=5, n_switch=0)
+    opt = solve_optimality(g)
+    classes = pack_arborescences(g.scaled(opt.U), opt.k)
+    verify_packing(g.scaled(opt.U), opt.k, classes)
+
+
+def test_broadcast_packing():
+    g = bidir_ring(6)
+    classes = pack_rooted_trees(g, {0: 2})   # λ(0) = 2 on a bidir ring
+    assert sum(c.mult for c in classes) == 2
+    for c in classes:
+        assert set(c.verts) == set(range(6))
+
+
+# ---------------------------------------------------------------------- #
+# fixed-k (§2.4)
+# ---------------------------------------------------------------------- #
+
+def test_fixed_k_bounds():
+    g = torus_2d(2, 2)   # full optimum needs k=2
+    full = solve_optimality(g)
+    r1 = solve_fixed_k(g, 1)
+    # k=1 can't beat the true optimum, and Theorem 15 bounds the gap
+    assert r1.runtime_factor >= full.inv_x_star
+    assert r1.runtime_factor <= full.inv_x_star + Fraction(1, 1 * min(
+        g.cap.values()))
+    rk = solve_fixed_k(g, full.k)
+    assert rk.runtime_factor == full.inv_x_star

@@ -1,0 +1,174 @@
+"""Per-architecture smoke tests (reduced configs): one train step + one
+forward on CPU asserting output shapes and finiteness, prefill/decode
+consistency, SSD chunked-vs-recurrent equality, ring-buffer cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import build_model
+from repro.models.attention import (MaskSpec, _blockwise_attend,
+                                    _direct_attend)
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+RNG = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=32):
+    batch = {"tokens": jax.random.randint(RNG, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embed"] = jax.random.normal(
+            RNG, (b, cfg.num_image_tokens, cfg.d_model)) * 0.02
+    if cfg.family == "audio":
+        batch["audio_embed"] = jax.random.normal(
+            RNG, (b, cfg.encoder_seq, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_train_step(name):
+    """Reduced config: forward + loss + grad, no NaNs, loss shape ()."""
+    cfg = reduced_config(name)
+    model = build_model(cfg, remat=True)
+    params = model.init(RNG)
+    batch = make_batch(cfg)
+    loss, token_loss = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), name
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_prefill_decode_shapes(name):
+    cfg = reduced_config(name)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    b, s = 2, 16
+    batch = make_batch(cfg, b, s)
+    state = model.init_decode_state(b, 64)
+    state, logits = jax.jit(model.prefill)(params, batch, state)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    prefix = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, state = jax.jit(model.decode_step)(
+        params, tok, state, jnp.asarray(s + prefix, jnp.int32))
+    assert logits2.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("name", ["qwen3-8b", "mixtral-8x7b", "gemma2-2b",
+                                  "mamba2-780m", "zamba2-1.2b",
+                                  "whisper-medium", "paligemma-3b"])
+def test_decode_consistent_with_prefill(name):
+    """decode_step(t_S) logits must equal prefill over [0..S] logits.
+    MoE archs need drop-free capacity: prefill and decode dispatch
+    separately, so capacity drops would (correctly) differ."""
+    cfg = reduced_config(name, capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    b, s = 2, 17
+    batch = make_batch(cfg, b, s + 1)
+    short = dict(batch, tokens=batch["tokens"][:, :s])
+
+    state = model.init_decode_state(b, 64)
+    state, _ = model.prefill(params, short, state)
+    prefix = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    tok = batch["tokens"][:, s:s + 1]
+    logits_dec, _ = model.decode_step(
+        params, tok, state, jnp.asarray(s + prefix, jnp.int32))
+
+    state2 = model.init_decode_state(b, 64)
+    _, logits_full = model.prefill(params, batch, state2)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ring_buffer_cache_matches_full_cache():
+    """Sliding-window arch: a window-sized ring cache must produce the same
+    decode logits as an unbounded cache."""
+    cfg = reduced_config("mixtral-8x7b", sliding_window=24,
+                         capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    b, s, steps = 1, 30, 8
+    batch = make_batch(cfg, b, s)
+
+    # ring cache: init_decode_state bounds it at window=24
+    st_ring = model.init_decode_state(b, 256)
+    assert st_ring["kv"][0].shape[2] == 24
+    st_ring, lg = model.prefill(params, batch, st_ring)
+    # full cache: force an unbounded one by lying about the window
+    import repro.models.transformer as T
+    full = (jnp.zeros((cfg.num_layers, b, 256,
+                       cfg.num_kv_heads, cfg.hd)),
+            jnp.zeros((cfg.num_layers, b, 256,
+                       cfg.num_kv_heads, cfg.hd)))
+    st_full = {"kv": full}
+    st_full, lg2 = model.prefill(params, batch, st_full)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg2),
+                               atol=2e-3, rtol=2e-3)
+    tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+    for i in range(steps):
+        idx = jnp.asarray(s + i, jnp.int32)
+        l1, st_ring = model.decode_step(params, tok, st_ring, idx)
+        l2, st_full = model.decode_step(params, tok, st_full, idx)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=2e-3, rtol=2e-3)
+        tok = jnp.argmax(l1[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------- #
+# SSD property tests
+# ---------------------------------------------------------------------- #
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([16, 32, 64]),
+       st.sampled_from([1, 2]), st.sampled_from([4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunked_equals_recurrence(seed, chunk, b, h):
+    key = jax.random.PRNGKey(seed)
+    s, p, n = 2 * chunk, 8, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bb = jax.random.normal(ks[3], (b, s, n))
+    cc = jax.random.normal(ks[4], (b, s, n))
+    y1, f1 = ssd_chunked(x, dt, a, bb, cc, chunk)
+    y2, f2 = ssd_reference(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------- #
+# blockwise attention property tests
+# ---------------------------------------------------------------------- #
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([None, 64, 128]),
+       st.booleans(),
+       st.sampled_from([0, 16]),
+       st.sampled_from([None, 30.0]))
+@settings(max_examples=12, deadline=None)
+def test_blockwise_matches_direct(seed, window, causal, prefix, cap):
+    if not causal:
+        window = None
+    key = jax.random.PRNGKey(seed)
+    b, s, h, hkv, d = 2, 256, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    pos = jnp.arange(s)
+    spec = MaskSpec(causal=causal, window=window, prefix_len=prefix)
+    ref = _direct_attend(q, k, v, pos, pos, spec, cap)
+    got = _blockwise_attend(q, k, v, pos, pos, spec, cap,
+                            block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

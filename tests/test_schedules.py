@@ -1,0 +1,102 @@
+"""Schedule compilation + simulation: correctness (verifier) and bandwidth
+optimality (ratio -> 1 with chunk count) across the topology zoo — the
+executable form of the paper's main theorem."""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (compile_allgather, compile_allreduce,
+                        compile_broadcast, compile_reduce_scatter,
+                        cut_traffic, rs_ag_allreduce_runtime,
+                        re_bc_allreduce_runtime, simulate_allgather,
+                        simulate_allreduce, simulate_broadcast,
+                        simulate_reduce_scatter, solve_optimality,
+                        theorem19_rs_ag_optimal)
+from repro.core.graph import DiGraph
+from repro.topo import (bidir_ring, dgx_box, dragonfly, fat_tree, fig1a,
+                        fully_connected, ring, star_switch, torus_2d)
+
+ZOO = [fig1a, lambda: ring(6), lambda: bidir_ring(5),
+       lambda: torus_2d(3, 3), fat_tree, dragonfly, dgx_box,
+       lambda: star_switch(5), lambda: fully_connected(4)]
+
+
+@pytest.mark.parametrize("make", ZOO)
+def test_allgather_verified_and_near_optimal(make):
+    g = make()
+    sched = compile_allgather(g, num_chunks=16, verify=True)
+    rep = simulate_allgather(sched)           # verifier runs inside
+    assert rep.ratio < 2.0
+    rep64 = simulate_allgather(compile_allgather(g, num_chunks=64))
+    assert rep64.sim_time <= rep.sim_time
+    assert rep64.ratio < 1.2, f"{g.name}: ratio {rep64.ratio}"
+
+
+@pytest.mark.parametrize("make", ZOO)
+def test_reduce_scatter_verified(make):
+    g = make()
+    rep = simulate_reduce_scatter(compile_reduce_scatter(g, num_chunks=16))
+    assert rep.ratio < 2.0
+
+
+@pytest.mark.parametrize("make", [fig1a, lambda: ring(5), dragonfly])
+def test_allreduce_verified(make):
+    g = make()
+    rep = simulate_allreduce(compile_allreduce(g, num_chunks=16))
+    assert rep.ratio < 2.0
+
+
+def test_pipeline_convergence_fig1a():
+    """§1.3: step-based (P=1) cannot be optimal; pipelining converges."""
+    g = fig1a()
+    ratios = [simulate_allgather(compile_allgather(g, num_chunks=p)).ratio
+              for p in (1, 4, 16, 64)]
+    assert ratios[0] > 1.5                       # one-shot schedule is poor
+    assert all(a >= b for a, b in zip(ratios, ratios[1:]))
+    assert ratios[-1] < 1.03
+
+
+def test_minimality_on_bottleneck_cut():
+    """Requirement (b) of §1.3: only (M/N)|S*∩Vc| crosses the cut."""
+    g = fig1a()
+    rep = simulate_allgather(compile_allgather(g, num_chunks=16))
+    cluster1 = {0, 1, 2, 3, 9}
+    assert cut_traffic(rep, cluster1) == Fraction(4, 8)
+
+
+def test_exact_optimality_ring():
+    """The unidirectional ring allgather hits the bound exactly."""
+    rep = simulate_allgather(compile_allgather(ring(8), num_chunks=16))
+    assert rep.sim_time == rep.lb_time
+
+
+def test_rs_ag_beats_re_bc():
+    """Appendix B: RS+AG strictly better than reduce+broadcast."""
+    for make in (fig1a, lambda: ring(6), dragonfly):
+        g = make()
+        assert rs_ag_allreduce_runtime(g) < re_bc_allreduce_runtime(g)
+    # fig1a: exactly 2x (paper's example)
+    g = fig1a()
+    assert re_bc_allreduce_runtime(g) == 2 * rs_ag_allreduce_runtime(g)
+
+
+def test_theorem19_fig1a():
+    """fig1a satisfies condition (a): |S*∩Vc| = N/2 -> RS+AG optimal."""
+    assert theorem19_rs_ag_optimal(fig1a()) is not None
+
+
+def test_broadcast_runtime():
+    g = bidir_ring(6)
+    sched = compile_broadcast(g, root=0, num_chunks=64)
+    rep = simulate_broadcast(sched)
+    assert rep.ratio < 1.15
+
+
+def test_fixed_k_schedule_runs():
+    g = torus_2d(2, 2)
+    sched = compile_allgather(g, num_chunks=8, fixed_k=1)
+    rep = simulate_allgather(sched)
+    # fixed k=1 on 2x2 torus: U*=2 vs optimal 3/4 -> ratio vs true LB >= 8/6
+    assert rep.sim_time >= rep.lb_time

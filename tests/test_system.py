@@ -1,0 +1,31 @@
+"""End-to-end behaviour tests for the paper's system: the full compiler
+pipeline (optimality -> edge split -> packing -> schedule -> simulate)
+reproduces every quantitative claim in the paper."""
+from fractions import Fraction
+
+from repro.core import (compile_allgather, simulate_allgather,
+                        solve_optimality, allgather_inv_xstar)
+from repro.topo import fig1a, fig1d_ring_unwound, multipod_topology
+
+
+def test_paper_headline_example():
+    """Fig 1a: optimum (M/N)(4/4b); ring unwinding (Fig 1d) is 4x worse;
+    the generated pipeline schedule achieves the bound."""
+    g = fig1a()
+    opt = solve_optimality(g)
+    assert opt.inv_x_star == 1          # = 4/4b with b=1, i.e. (M/N)·1
+    assert allgather_inv_xstar(fig1d_ring_unwound()) == 4 * opt.inv_x_star
+
+    rep = simulate_allgather(compile_allgather(g, num_chunks=128))
+    assert rep.ratio < 1.02             # pipelined -> optimal in the limit
+
+
+def test_multipod_model_matches_fig1a_structure():
+    """Our 2-pod DCN model is the paper's 2-cluster topology: the DCN cut
+    dominates and edge splitting preserves its full bandwidth."""
+    g = multipod_topology(num_pods=2, nodes_per_pod=4, ici_cap=10,
+                          dcn_cap=1)
+    opt = solve_optimality(g)
+    assert opt.inv_x_star == Fraction(1)
+    rep = simulate_allgather(compile_allgather(g, num_chunks=64))
+    assert rep.ratio < 1.05
