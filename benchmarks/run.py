@@ -8,11 +8,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
   zoo_optimality       — eq (1) + achieved ratio across the topology zoo
   allreduce_rs_ag      — App. B: RS+AG vs RE+BC runtime factors
   schedule_gen_scaling — §3: strongly-polynomial generation time vs size
+  schedule_sweep       — compile+verify the full topology zoo in parallel,
+                         emitting BENCH_schedules.json (see repro.cache.sweep)
   jax_collectives      — wall-time of tree-pipeline vs XLA collectives on
                          8 host devices (subprocess)
+
+Modes: default runs everything; ``--smoke`` runs only the 3-topology sweep
+smoke (<60s, CI); ``--sweep`` runs only the full sweep.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
@@ -107,13 +113,37 @@ def schedule_gen_scaling() -> None:
         f"t(100x_bandwidth)/t(1x)={us100 / max(us1, 1):.2f}")
 
 
+def schedule_sweep(out_path: str, smoke: bool = False,
+                   cache_dir: str | None = None) -> None:
+    """Parallel zoo sweep; every entry must reproduce its claimed runtime."""
+    from repro.cache import SMOKE_NAMES, claim_mismatches, run_sweep
+    names = list(SMOKE_NAMES) if smoke else None
+    t0 = time.perf_counter()
+    doc = run_sweep(names=names, cache_dir=cache_dir, out_path=out_path)
+    us = (time.perf_counter() - t0) * 1e6
+    for e in doc["entries"]:
+        row(f"schedule_sweep.{e['name']}", e["compile_time_s"] * 1e6,
+            f"inv_x*={e['inv_x_star']};k={e['k']};depth={e['depth']};"
+            f"achieved/claimed={e['achieved_over_claimed']};"
+            f"achieved/lb={e['achieved_over_lb_float']:.4f}")
+    bad = claim_mismatches(doc)
+    row("schedule_sweep.total", us,
+        f"topologies={doc['num_topologies']};claim_mismatches={len(bad)};"
+        f"out={out_path}")
+    if bad:
+        raise SystemExit(f"schedule sweep claim mismatches: {bad}")
+
+
 def jax_collectives() -> None:
     """Wall time of the executable tree-pipeline collectives vs XLA's
     built-ins on 8 host CPU devices (latency-bound toy, but end-to-end)."""
     code = textwrap.dedent("""
         import time
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.topo import bidir_ring
         from repro.core.schedule import compile_allgather, \\
@@ -154,13 +184,33 @@ def jax_collectives() -> None:
         print(out.stdout.strip(), flush=True)
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="3-topology schedule sweep only (<60s, CI)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="full schedule sweep only")
+    ap.add_argument("--out", default=None,
+                    help="sweep output path (default: BENCH_schedules.json, "
+                         "or BENCH_schedules.smoke.json under --smoke so the "
+                         "committed full-sweep scoreboard is never clobbered)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="schedule artifact cache dir for the sweep")
+    args = ap.parse_args(argv)
+    if args.out is None:
+        from repro.cache import default_out_path
+        args.out = default_out_path(partial=args.smoke)
+
     print("name,us_per_call,derived")
+    if args.smoke or args.sweep:
+        schedule_sweep(args.out, smoke=args.smoke, cache_dir=args.cache_dir)
+        return
     fig1_optimality()
     pipeline_convergence()
     zoo_optimality()
     allreduce_rs_ag()
     schedule_gen_scaling()
+    schedule_sweep(args.out, cache_dir=args.cache_dir)
     jax_collectives()
 
 

@@ -2,6 +2,8 @@
 edge splitting, tree packing, chunked pipelining, physical-link loads.
 
     PYTHONPATH=src python examples/schedule_explorer.py --topo dragonfly
+    PYTHONPATH=src python examples/schedule_explorer.py --topo hypercube3 \
+        --cache /tmp/schedules   # second run replays the artifact
 """
 import argparse
 import os
@@ -13,27 +15,33 @@ from repro.core import (compile_allgather, compile_allreduce,
                         simulate_allgather, simulate_allreduce,
                         rs_ag_allreduce_runtime, re_bc_allreduce_runtime)
 from repro import topo
+from repro.cache import ScheduleCache, sweep_registry
 
-TOPOS = {
-    "fig1a": topo.fig1a,
-    "ring8": lambda: topo.ring(8),
-    "torus4x4": lambda: topo.torus_2d(4, 4),
+# every sweep topology (hypercube/BCube/mesh-of-DGX/degraded included)
+# plus a couple of explorer-only aliases
+TOPOS = dict(sweep_registry())
+TOPOS.update({
     "fat_tree": topo.fat_tree,
-    "dragonfly": topo.dragonfly,
     "dgx": topo.dgx_box,
-    "multipod": lambda: topo.multipod_topology(2, 4, 10, 1),
-}
+})
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--topo", default="fig1a", choices=sorted(TOPOS))
     ap.add_argument("--chunks", type=int, default=32)
+    ap.add_argument("--cache", default="",
+                    help="schedule artifact cache dir (skip recompilation)")
     args = ap.parse_args()
 
     g = TOPOS[args.topo]()
     print(g.describe())
-    sched = compile_allgather(g, num_chunks=args.chunks, verify=True)
+    if args.cache:
+        cache = ScheduleCache(args.cache, verify_on_compile=True)
+        sched = cache.allgather(g, num_chunks=args.chunks)
+        print(cache.describe())
+    else:
+        sched = compile_allgather(g, num_chunks=args.chunks, verify=True)
     print(f"\nallgather: {sched.describe()}")
     print(f"tree classes: {len(sched.classes)}  "
           f"(depths <= {sched.depth})")

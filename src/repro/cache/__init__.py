@@ -1,0 +1,11 @@
+# Schedule artifact subsystem: content-addressed fingerprints, exact-Fraction
+# JSON serialization of compiled pipeline schedules, an on-disk cache with
+# compiler-versioned invalidation, and the topology-zoo sweep driver.
+from .fingerprint import (FORMAT_VERSION, compiler_fingerprint,  # noqa: F401
+                          graph_fingerprint, schedule_cache_key)
+from .serialize import (SerializationError, allreduce_from_json,  # noqa: F401
+                        allreduce_to_json, dumps_canonical, ensure_claimed,
+                        schedule_from_json, schedule_to_json)
+from .store import CacheStats, ScheduleCache, default_cache_dir  # noqa: F401
+from .sweep import (SMOKE_NAMES, claim_mismatches,  # noqa: F401
+                    default_out_path, run_sweep, sweep_registry)

@@ -1,0 +1,72 @@
+"""Content-addressed keys for schedule artifacts.
+
+Two fingerprints combine into a cache key:
+
+* ``graph_fingerprint`` — the topology side.  Canonical form = node count +
+  compute set + switch set + sorted edge/capacity multiset (see
+  `DiGraph.canonical_form`); the display name is excluded, so structurally
+  identical topologies share entries.
+
+* ``compiler_fingerprint`` — the code side.  A hash over the *source text*
+  of every `repro.core` module that participates in compilation plus the
+  artifact `FORMAT_VERSION`.  Any edit to the optimality search, edge
+  splitting, packing, round construction or the serialization schema
+  changes the fingerprint and invalidates every cached schedule — stale
+  artifacts are never replayed after a compiler change.
+"""
+from __future__ import annotations
+
+import hashlib
+from functools import lru_cache
+from typing import Optional
+
+from repro.core.graph import DiGraph
+
+# Bump when the JSON schema in serialize.py changes incompatibly.
+FORMAT_VERSION = 1
+
+# Modules whose behaviour determines what a compiled schedule looks like.
+_COMPILER_MODULES = (
+    "repro.core.graph",
+    "repro.core.maxflow",
+    "repro.core.optimality",
+    "repro.core.edge_split",
+    "repro.core.arborescence",
+    "repro.core.fixed_k",
+    "repro.core.schedule",
+    "repro.core.simulate",
+)
+
+
+def graph_fingerprint(g: DiGraph) -> str:
+    return g.fingerprint()
+
+
+@lru_cache(maxsize=1)
+def compiler_fingerprint() -> str:
+    """Hex digest (16 chars) of the schedule compiler's source code."""
+    import importlib
+
+    h = hashlib.sha256()
+    h.update(f"format={FORMAT_VERSION}".encode())
+    for name in _COMPILER_MODULES:
+        mod = importlib.import_module(name)
+        path = getattr(mod, "__file__", None)
+        h.update(name.encode())
+        if path:
+            with open(path, "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def schedule_cache_key(kind: str, topo: DiGraph, num_chunks: int,
+                       fixed_k: Optional[int] = None,
+                       root: Optional[int] = None,
+                       compiler_fp: Optional[str] = None) -> str:
+    """Filename-safe key identifying one compiled artifact."""
+    parts = [kind, topo.fingerprint(), f"p{num_chunks}",
+             f"k{fixed_k if fixed_k is not None else 'auto'}"]
+    if root is not None:
+        parts.append(f"r{root}")
+    parts.append(compiler_fp or compiler_fingerprint())
+    return "-".join(parts)

@@ -1,0 +1,197 @@
+"""On-disk `ScheduleCache` — compile once, replay everywhere.
+
+Artifacts live one-per-file under a root directory; the filename *is* the
+cache key: ``{kind}-{graph_fp}-p{P}-k{K}[-r{root}]-{compiler_fp}.json``.
+Because the compiler fingerprint is part of the key, editing any compiler
+module silently invalidates every stale entry (old files are ignored, and
+`prune_stale()` deletes them).
+
+Hit path: read + deserialize, no compilation.  Miss path: delegate to the
+`repro.core.schedule` compilers (resolved at call time through the module so
+tests can monkeypatch/count them), attach the claimed exact runtime, write
+atomically (tmp + rename), return.
+
+An in-memory layer sits above the disk so repeated lookups inside one
+process don't even touch the filesystem.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from fractions import Fraction
+from pathlib import Path
+from typing import Dict, List, Optional, Union
+
+from repro.core import schedule as schedule_mod
+from repro.core.graph import DiGraph
+from repro.core.schedule import AllReduceSchedule, PipelineSchedule
+
+from .fingerprint import compiler_fingerprint, schedule_cache_key
+from .serialize import (allreduce_from_json, allreduce_to_json,
+                        schedule_from_json, schedule_to_json)
+
+Artifact = Union[PipelineSchedule, AllReduceSchedule]
+
+
+def default_cache_dir() -> str:
+    """$REPRO_SCHEDULE_CACHE, else ~/.cache/repro/schedules."""
+    env = os.environ.get("REPRO_SCHEDULE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "schedules")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+
+    def describe(self) -> str:
+        return f"hits={self.hits} misses={self.misses} puts={self.puts}"
+
+
+class ScheduleCache:
+    def __init__(self, root: Union[str, Path, None] = None,
+                 compiler_fp: Optional[str] = None,
+                 verify_on_compile: bool = False):
+        self.root = Path(root if root is not None else default_cache_dir())
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.compiler_fp = compiler_fp or compiler_fingerprint()
+        self.verify_on_compile = verify_on_compile
+        self.stats = CacheStats()
+        self._memory: Dict[str, Artifact] = {}
+
+    # ------------------------------------------------------------------ #
+    # key / path plumbing
+    # ------------------------------------------------------------------ #
+
+    def key(self, kind: str, topo: DiGraph, num_chunks: int,
+            fixed_k: Optional[int] = None, root: Optional[int] = None) -> str:
+        return schedule_cache_key(kind, topo, num_chunks, fixed_k=fixed_k,
+                                  root=root, compiler_fp=self.compiler_fp)
+
+    def path_for(self, key: str) -> Path:
+        return self.root / f"{key}.json"
+
+    def _load(self, key: str, allreduce: bool) -> Optional[Artifact]:
+        if key in self._memory:
+            self.stats.hits += 1
+            return self._memory[key]
+        path = self.path_for(key)
+        if not path.exists():
+            self.stats.misses += 1
+            return None
+        try:
+            text = path.read_text()
+            art: Artifact = (allreduce_from_json(text) if allreduce
+                             else schedule_from_json(text))
+        except Exception as e:  # noqa: BLE001 — any unreadable artifact
+            # torn write / corrupt artifact: drop it and recompile rather
+            # than brick every consumer of this cache directory
+            import warnings
+            warnings.warn(f"discarding unreadable schedule artifact "
+                          f"{path.name}: {e}")
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            self.stats.misses += 1
+            return None
+        self._memory[key] = art
+        self.stats.hits += 1
+        return art
+
+    def _store(self, key: str, art: Artifact) -> None:
+        text = (allreduce_to_json(art) if isinstance(art, AllReduceSchedule)
+                else schedule_to_json(art))
+        path = self.path_for(key)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self._memory[key] = art
+        self.stats.puts += 1
+
+    # ------------------------------------------------------------------ #
+    # cached compilers
+    # ------------------------------------------------------------------ #
+
+    def allgather(self, topo: DiGraph, num_chunks: int = 8,
+                  fixed_k: Optional[int] = None) -> PipelineSchedule:
+        key = self.key("allgather", topo, num_chunks, fixed_k)
+        hit = self._load(key, allreduce=False)
+        if hit is not None:
+            return hit
+        sched = schedule_mod.compile_allgather(
+            topo, num_chunks=num_chunks, fixed_k=fixed_k,
+            verify=self.verify_on_compile)
+        self._store(key, sched)
+        return sched
+
+    def reduce_scatter(self, topo: DiGraph, num_chunks: int = 8,
+                       fixed_k: Optional[int] = None) -> PipelineSchedule:
+        key = self.key("reduce_scatter", topo, num_chunks, fixed_k)
+        hit = self._load(key, allreduce=False)
+        if hit is not None:
+            return hit
+        sched = schedule_mod.compile_reduce_scatter(
+            topo, num_chunks=num_chunks, fixed_k=fixed_k,
+            verify=self.verify_on_compile)
+        self._store(key, sched)
+        return sched
+
+    def allreduce(self, topo: DiGraph, num_chunks: int = 8,
+                  fixed_k: Optional[int] = None) -> AllReduceSchedule:
+        key = self.key("allreduce", topo, num_chunks, fixed_k)
+        hit = self._load(key, allreduce=True)
+        if hit is not None:
+            return hit
+        ar = schedule_mod.compile_allreduce(
+            topo, num_chunks=num_chunks, fixed_k=fixed_k,
+            verify=self.verify_on_compile)
+        self._store(key, ar)
+        return ar
+
+    def broadcast(self, topo: DiGraph, root: int,
+                  num_chunks: int = 8) -> PipelineSchedule:
+        key = self.key("broadcast", topo, num_chunks, root=root)
+        hit = self._load(key, allreduce=False)
+        if hit is not None:
+            return hit
+        sched = schedule_mod.compile_broadcast(topo, root=root,
+                                               num_chunks=num_chunks)
+        self._store(key, sched)
+        return sched
+
+    # ------------------------------------------------------------------ #
+    # maintenance
+    # ------------------------------------------------------------------ #
+
+    def entries(self) -> List[str]:
+        return sorted(p.stem for p in self.root.glob("*.json"))
+
+    def prune_stale(self) -> int:
+        """Delete artifacts written by a different compiler fingerprint."""
+        removed = 0
+        for p in self.root.glob("*.json"):
+            if not p.stem.endswith(self.compiler_fp):
+                p.unlink()
+                removed += 1
+        return removed
+
+    def clear(self) -> None:
+        for p in self.root.glob("*.json"):
+            p.unlink()
+        self._memory.clear()
+
+    def describe(self) -> str:
+        return (f"ScheduleCache[{self.root}] compiler={self.compiler_fp} "
+                f"entries={len(self.entries())} {self.stats.describe()}")

@@ -1,4 +1,6 @@
-from .executor import PermuteCall, PermuteProgram, compile_program  # noqa: F401
+from .executor import (PermuteCall, PermuteProgram,  # noqa: F401
+                       compile_program, programs_for_topology,
+                       schedules_for_topology)
 from .collectives import (tree_all_gather, tree_reduce_scatter,  # noqa: F401
                           tree_all_reduce)
 from .mesh_axes import CollectiveContext, AxisSchedules  # noqa: F401

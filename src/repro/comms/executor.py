@@ -23,10 +23,11 @@ scatter the (zero) ppermute result there.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.graph import DiGraph
 from repro.core.schedule import PipelineSchedule, Send
 
 
@@ -117,5 +118,33 @@ def compile_program(sched: PipelineSchedule) -> PermuteProgram:
     return PermuteProgram(kind=sched.kind, axis_size=a,
                           num_slots=a * s, slots_per_shard=s,
                           rounds=tuple(rounds))
+
+
+# ---------------------------------------------------------------------- #
+# cache-aware schedule acquisition
+# ---------------------------------------------------------------------- #
+
+def schedules_for_topology(topo: DiGraph, num_chunks: int = 8,
+                           fixed_k: Optional[int] = None, cache=None
+                           ) -> Tuple[PipelineSchedule, PipelineSchedule]:
+    """(allgather, reduce_scatter) schedules for `topo`, consulting a
+    `repro.cache.ScheduleCache` first when one is given — a hit replays the
+    serialized artifact and never invokes the compiler."""
+    if cache is not None:
+        return (cache.allgather(topo, num_chunks=num_chunks, fixed_k=fixed_k),
+                cache.reduce_scatter(topo, num_chunks=num_chunks,
+                                     fixed_k=fixed_k))
+    from repro.core.schedule import compile_allgather, compile_reduce_scatter
+    return (compile_allgather(topo, num_chunks=num_chunks, fixed_k=fixed_k),
+            compile_reduce_scatter(topo, num_chunks=num_chunks,
+                                   fixed_k=fixed_k))
+
+
+def programs_for_topology(topo: DiGraph, num_chunks: int = 8,
+                          fixed_k: Optional[int] = None, cache=None
+                          ) -> Tuple[PermuteProgram, PermuteProgram]:
+    """(rs_prog, ag_prog) — the argument order `tree_all_reduce` expects."""
+    ag, rs = schedules_for_topology(topo, num_chunks, fixed_k, cache)
+    return compile_program(rs), compile_program(ag)
 
 

@@ -4,7 +4,9 @@ Production collectives on a TPU mesh decompose axis-wise (an allreduce over
 ('pod','data') = hierarchical RS/AG per axis).  Each axis has a *physical*
 topology model (torus ring for ICI axes, switch star / pipe for the DCN
 'pod' axis) and gets its own bandwidth-optimal schedule from the paper's
-compiler.  Programs are cached per (axis, kind, P).
+compiler.  Programs are cached per (axis, kind, P) in memory; pass an
+on-disk `repro.cache.ScheduleCache` to also skip compilation across
+processes/launches.
 """
 from __future__ import annotations
 
@@ -13,10 +15,9 @@ import functools
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.graph import DiGraph
-from repro.core.schedule import (compile_allgather, compile_reduce_scatter,
-                                 PipelineSchedule)
+from repro.core.schedule import PipelineSchedule
 from repro.topo.tpu import axis_topology_for_mesh
-from .executor import PermuteProgram, compile_program
+from .executor import PermuteProgram, compile_program, schedules_for_topology
 
 
 @dataclasses.dataclass
@@ -39,10 +40,12 @@ class CollectiveContext:
 
     def __init__(self, mesh_axes: Dict[str, int], num_chunks: int = 8,
                  topologies: Optional[Dict[str, DiGraph]] = None,
-                 fixed_k: Optional[int] = None):
+                 fixed_k: Optional[int] = None,
+                 schedule_cache=None):
         self.mesh_axes = dict(mesh_axes)
         self.num_chunks = num_chunks
         self.fixed_k = fixed_k
+        self.schedule_cache = schedule_cache  # Optional[ScheduleCache]
         self._topologies = dict(topologies or {})
         self._cache: Dict[str, AxisSchedules] = {}
 
@@ -55,10 +58,9 @@ class CollectiveContext:
     def axis(self, axis: str) -> AxisSchedules:
         if axis not in self._cache:
             topo = self.topology(axis)
-            ag = compile_allgather(topo, num_chunks=self.num_chunks,
-                                   fixed_k=self.fixed_k)
-            rs = compile_reduce_scatter(topo, num_chunks=self.num_chunks,
-                                        fixed_k=self.fixed_k)
+            ag, rs = schedules_for_topology(
+                topo, num_chunks=self.num_chunks, fixed_k=self.fixed_k,
+                cache=self.schedule_cache)
             self._cache[axis] = AxisSchedules(
                 axis_name=axis, topology=topo,
                 ag_sched=ag, rs_sched=rs,

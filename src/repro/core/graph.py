@@ -16,6 +16,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from fractions import Fraction
 from typing import Dict, FrozenSet, Iterable, Iterator, List, Mapping, Tuple
@@ -102,6 +103,22 @@ class DiGraph:
 
     def bandwidth_gcd(self) -> int:
         return math.gcd(*self.cap.values()) if self.cap else 1
+
+    # ------------------------------------------------------------------ #
+    # content addressing
+    # ------------------------------------------------------------------ #
+    def canonical_form(self) -> str:
+        """Deterministic text encoding of the topology *structure*: node
+        count, compute set, switch set and the sorted edge/capacity multiset.
+        The display `name` is deliberately excluded so two differently-named
+        builds of the same topology share one cache entry."""
+        edges = ";".join(f"{u},{v},{c}" for (u, v), c in sorted(self.cap.items()))
+        return (f"n={self.num_nodes}|c={','.join(map(str, sorted(self.compute)))}"
+                f"|s={','.join(map(str, sorted(self.switches)))}|e={edges}")
+
+    def fingerprint(self) -> str:
+        """Content-addressed key for schedule caching (hex, 16 chars)."""
+        return hashlib.sha256(self.canonical_form().encode()).hexdigest()[:16]
 
     # ------------------------------------------------------------------ #
     # transforms

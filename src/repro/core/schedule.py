@@ -57,6 +57,10 @@ class PipelineSchedule:
     class_slot_offset: List[int]   # per class: first slot within root shard
     # physical path assignment: (cls, edge) -> [(path, units), ...]
     path_assignment: Dict[Tuple[int, Edge], List[Tuple[Tuple[int, ...], int]]]
+    # exact pipelined runtime (data_size=1) claimed by the compiler; filled
+    # in by the simulator / cache layer, carried by serialized artifacts so
+    # a loaded schedule can be re-verified against its claim.
+    claimed_runtime: Optional[Fraction] = None
 
     @property
     def nodes(self) -> List[int]:
@@ -261,6 +265,12 @@ class AllReduceSchedule:
     def runtime_factor(self) -> Fraction:
         """2 · (M/N) · 1/x* per unit M — optimal under Theorem 19 conditions."""
         return self.rs.lb_runtime_factor() + self.ag.lb_runtime_factor()
+
+    @property
+    def claimed_runtime(self) -> Optional[Fraction]:
+        if self.rs.claimed_runtime is None or self.ag.claimed_runtime is None:
+            return None
+        return self.rs.claimed_runtime + self.ag.claimed_runtime
 
     def describe(self) -> str:
         return f"allreduce = [{self.rs.describe()}] + [{self.ag.describe()}]"

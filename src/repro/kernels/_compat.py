@@ -1,0 +1,10 @@
+"""jax version compatibility for the Pallas TPU kernels.
+
+jax has renamed the TPU compiler-params dataclass across releases
+(CompilerParams <-> TPUCompilerParams); resolve whichever this install
+provides in one place.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -26,7 +26,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from ._compat import CompilerParams as _CompilerParams
 
 
 def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
@@ -95,7 +95,7 @@ def ssd_chunk_intra(x: jax.Array, dt: jax.Array, a: jax.Array,
             jax.ShapeDtypeStruct((bh, s, p), x.dtype),
             jax.ShapeDtypeStruct((bh, l, p, n), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, dt, a.reshape(bh, 1), b, c)

@@ -20,6 +20,9 @@ def main() -> int:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--host-devices", type=int, default=0)
+    ap.add_argument("--schedule-cache", default="",
+                    help="pre-compile the model-axis tree-pipeline collective "
+                         "programs into this on-disk artifact cache")
     args = ap.parse_args()
 
     if args.host_devices and "XLA_FLAGS" not in os.environ:
@@ -41,6 +44,19 @@ def main() -> int:
     mp = args.model_parallel
     devs = jax.devices()[:mp]
     mesh = Mesh(np.array(devs).reshape(1, mp), ("data", "model"))
+
+    if args.schedule_cache:
+        # Serving restarts are frequent; warm the artifact cache with the
+        # model-axis tree-pipeline programs so only the first boot pays for
+        # schedule compilation (pipeline-collectives consumers load them;
+        # the XLA-collective engine below is unaffected).
+        from repro.cache import ScheduleCache
+        from repro.comms import CollectiveContext
+        cache = ScheduleCache(args.schedule_cache)
+        ctx = CollectiveContext({"data": 1, "model": mp},
+                                schedule_cache=cache)
+        print(ctx.describe())
+        print(cache.describe())
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0),

@@ -33,6 +33,11 @@ def main() -> int:
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--host-devices", type=int, default=0,
                     help="re-exec with N forced host devices (CPU testing)")
+    ap.add_argument("--schedule-cache", default="",
+                    help="pre-compile the per-axis tree-pipeline collective "
+                         "programs into this on-disk artifact cache (later "
+                         "launches and any pipeline-collectives consumer "
+                         "load them instead of compiling)")
     args = ap.parse_args()
 
     if args.host_devices and "XLA_FLAGS" not in os.environ:
@@ -60,6 +65,22 @@ def main() -> int:
         raise SystemExit(f"need {dp * mp} devices, have {len(devs)}")
     mesh = Mesh(np.array(devs[:dp * mp]).reshape(dp, mp), ("data", "model"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    if args.schedule_cache:
+        # Warm the on-disk artifact cache with this mesh's per-axis
+        # tree-pipeline programs: the first launch compiles and persists,
+        # later launches deserialize.  The XLA-collective train step below
+        # does not consume these; the BucketedAllReduce gradient hook and
+        # other pipeline-collectives consumers do (ROADMAP follow-up wires
+        # it through this same cache).
+        from repro.cache import ScheduleCache
+        from repro.comms import CollectiveContext
+        cache = ScheduleCache(args.schedule_cache)
+        ctx = CollectiveContext(dict(zip(mesh.axis_names,
+                                         mesh.devices.shape)),
+                                schedule_cache=cache)
+        print(ctx.describe())
+        print(cache.describe())
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg, remat=True)

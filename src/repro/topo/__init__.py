@@ -1,7 +1,8 @@
 from .zoo import (  # noqa: F401
     ring, bidir_ring, line, fully_connected, torus_2d, torus_3d,
-    star_switch, two_cluster_switch, fig1a, fig1d_ring_unwound,
-    fat_tree, dragonfly, dgx_box,
+    hypercube, star_switch, two_cluster_switch, fig1a, fig1d_ring_unwound,
+    fat_tree, dragonfly, dgx_box, bcube, mesh_of_dgx,
+    fail_link, degrade_link,
 )
 from .tpu import (  # noqa: F401
     TPU_V5E, HardwareSpec, v5e_pod_topology, multipod_topology,

@@ -69,6 +69,17 @@ def torus_2d(rows: int, cols: int, cap: int = 1,
                    f"torus{rows}x{cols}" + ("" if wrap else "-mesh"))
 
 
+def hypercube(dim: int, cap: int = 1) -> DiGraph:
+    """dim-dimensional binary hypercube, bidirectional links."""
+    n = 1 << dim
+    edges: Dict[Edge, int] = {}
+    for u in range(n):
+        for b in range(dim):
+            v = u ^ (1 << b)
+            edges[(u, v)] = cap
+    return DiGraph(n, frozenset(range(n)), edges, f"hcube{dim}")
+
+
 def torus_3d(x: int, y: int, z: int, cap: int = 1) -> DiGraph:
     n = x * y * z
 
@@ -199,3 +210,84 @@ def dgx_box(n: int = 8, nvlink_cap: int = 12, nic_cap: int = 1) -> DiGraph:
         edges[(i, sw)] = nic_cap
         edges[(sw, i)] = nic_cap
     return DiGraph(n + 1, frozenset(range(n)), edges, f"dgx{n}")
+
+
+def bcube(n: int = 2, cap: int = 1) -> DiGraph:
+    """BCube_1(n): n² servers, n level-0 switches (one per pod of n servers)
+    and n level-1 switches (one per within-pod index).  Server (p, i) =
+    id p·n+i connects to level-0 switch p and level-1 switch i."""
+    servers = n * n
+    edges: Dict[Edge, int] = {}
+    for p in range(n):
+        for i in range(n):
+            h = p * n + i
+            lvl0 = servers + p
+            lvl1 = servers + n + i
+            for sw in (lvl0, lvl1):
+                edges[(h, sw)] = cap
+                edges[(sw, h)] = cap
+    return DiGraph(servers + 2 * n, frozenset(range(servers)), edges,
+                   f"bcube{n}")
+
+
+def mesh_of_dgx(rows: int = 2, cols: int = 2, gpus: int = 2,
+                nvlink_cap: int = 4, dcn_cap: int = 1) -> DiGraph:
+    """2-D (non-wrapping) mesh of DGX-style boxes: each box is `gpus`
+    NVLink-fully-connected GPUs behind one NIC switch; NIC switches link to
+    their mesh neighbours with `dcn_cap` per direction, and every GPU feeds
+    its box switch with `dcn_cap`.  All links bidirectional -> Eulerian."""
+    boxes = rows * cols
+    n = boxes * gpus
+
+    def sw(r: int, c: int) -> int:
+        return n + r * cols + c
+
+    edges: Dict[Edge, int] = {}
+    for b in range(boxes):
+        base = b * gpus
+        for i in range(gpus):
+            for j in range(gpus):
+                if i != j:
+                    edges[(base + i, base + j)] = nvlink_cap
+            edges[(base + i, n + b)] = dcn_cap
+            edges[(n + b, base + i)] = dcn_cap
+    for r in range(rows):
+        for c in range(cols):
+            for (r2, c2) in ((r, c + 1), (r + 1, c)):
+                if r2 < rows and c2 < cols:
+                    edges[(sw(r, c), sw(r2, c2))] = dcn_cap
+                    edges[(sw(r2, c2), sw(r, c))] = dcn_cap
+    return DiGraph(n + boxes, frozenset(range(n)), edges,
+                   f"meshdgx{rows}x{cols}x{gpus}")
+
+
+# ---------------------------------------------------------------------- #
+# degraded / failed-link variants
+# ---------------------------------------------------------------------- #
+
+def fail_link(g: DiGraph, u: int, v: int, name: str | None = None) -> DiGraph:
+    """Remove the bidirectional link u<->v (both directed edges must exist,
+    with equal capacity, so the result stays Eulerian)."""
+    if g.cap.get((u, v)) != g.cap.get((v, u)) or (u, v) not in g.cap:
+        raise ValueError(f"{g.name}: ({u},{v}) is not a symmetric link")
+    cap = {e: c for e, c in g.cap.items() if e not in ((u, v), (v, u))}
+    out = DiGraph(g.num_nodes, g.compute, cap,
+                  name or f"{g.name}-fail{u}_{v}")
+    if not out.is_eulerian():
+        raise ValueError(f"{g.name}: failing ({u},{v}) breaks Eulerian-ness")
+    return out
+
+
+def degrade_link(g: DiGraph, u: int, v: int, cap: int,
+                 name: str | None = None) -> DiGraph:
+    """Reduce the bidirectional link u<->v to `cap` per direction (models a
+    partially failed NVLink/NIC bundle; stays Eulerian by symmetry)."""
+    if g.cap.get((u, v)) != g.cap.get((v, u)) or (u, v) not in g.cap:
+        raise ValueError(f"{g.name}: ({u},{v}) is not a symmetric link")
+    if not (0 < cap < g.cap[(u, v)]):
+        raise ValueError(f"degraded capacity {cap} must be in "
+                         f"(0, {g.cap[(u, v)]})")
+    new = dict(g.cap)
+    new[(u, v)] = new[(v, u)] = cap
+    return DiGraph(g.num_nodes, g.compute, new,
+                   name or f"{g.name}-deg{u}_{v}x{cap}")

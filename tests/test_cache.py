@@ -1,0 +1,257 @@
+"""Schedule artifact subsystem: fingerprints, exact JSON round-trip,
+on-disk cache (hit path must skip the compiler), golden-schedule
+regressions, and the topology-zoo sweep."""
+import json
+from fractions import Fraction
+from pathlib import Path
+
+import pytest
+
+from repro.cache import (ScheduleCache, SMOKE_NAMES, allreduce_from_json,
+                         allreduce_to_json, compiler_fingerprint, run_sweep,
+                         schedule_from_json, schedule_to_json, sweep_registry)
+from repro.cache.serialize import ensure_claimed
+from repro.core import (compile_allgather, compile_allreduce,
+                        compile_reduce_scatter, simulate_allgather,
+                        simulate_allreduce, simulate_reduce_scatter)
+from repro.core.graph import DiGraph
+from repro.topo import (bcube, bidir_ring, dragonfly, fig1a, hypercube,
+                        mesh_of_dgx, ring, two_cluster_switch)
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+
+# ---------------------------------------------------------------------- #
+# graph fingerprint
+# ---------------------------------------------------------------------- #
+
+def test_fingerprint_ignores_name_and_insertion_order():
+    a = bidir_ring(6, name="a")
+    b = bidir_ring(6, name="completely-different")
+    assert a.fingerprint() == b.fingerprint()
+    # same edges inserted in reverse order
+    c = DiGraph(a.num_nodes, a.compute,
+                dict(reversed(list(a.cap.items()))), "c")
+    assert c.fingerprint() == a.fingerprint()
+
+
+def test_fingerprint_sensitive_to_structure():
+    base = bidir_ring(6)
+    fps = {base.fingerprint()}
+    # capacity change
+    fps.add(bidir_ring(6, cap=2).fingerprint())
+    # node count change
+    fps.add(bidir_ring(7).fingerprint())
+    # compute/switch partition change (same edges, node 5 demoted to switch)
+    fps.add(DiGraph(6, frozenset(range(5)), dict(base.cap)).fingerprint())
+    assert len(fps) == 4
+
+
+def test_compiler_fingerprint_stable():
+    assert compiler_fingerprint() == compiler_fingerprint()
+    assert len(compiler_fingerprint()) == 16
+
+
+# ---------------------------------------------------------------------- #
+# serialization round-trip (exact Fractions, byte stability)
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("make,p", [
+    (fig1a, 8), (lambda: ring(6), 4), (lambda: bidir_ring(5), 4),
+    (dragonfly, 4), (lambda: hypercube(3), 4),
+])
+def test_schedule_roundtrip_exact(make, p):
+    sched = compile_allgather(make(), num_chunks=p)
+    text = schedule_to_json(sched)
+    back = schedule_from_json(text)
+    # byte-stable: serialize(deserialize(text)) == text
+    assert schedule_to_json(back) == text
+    # exact-Fraction fidelity
+    assert isinstance(back.opt.inv_x_star, Fraction)
+    assert back.opt == sched.opt
+    assert back.claimed_runtime == sched.claimed_runtime
+    assert back.rounds == sched.rounds
+    assert back.path_assignment == sched.path_assignment
+    assert back.topo.cap == sched.topo.cap
+    assert [(c.root, c.mult, c.verts, c.edges) for c in back.classes] == \
+        [(c.root, c.mult, c.verts, c.edges) for c in sched.classes]
+    # the deserialized artifact verifies and reproduces its claim exactly
+    rep = simulate_allgather(back)
+    assert rep.sim_time == back.claimed_runtime
+
+
+def test_allreduce_roundtrip_exact():
+    ar = compile_allreduce(dragonfly(), num_chunks=4)
+    text = allreduce_to_json(ar)
+    back = allreduce_from_json(text)
+    assert allreduce_to_json(back) == text
+    rep = simulate_allreduce(back)
+    assert rep.sim_time == back.claimed_runtime
+
+
+def test_reduce_scatter_roundtrip_exact():
+    sched = compile_reduce_scatter(fig1a(), num_chunks=4)
+    back = schedule_from_json(schedule_to_json(sched))
+    rep = simulate_reduce_scatter(back)
+    assert rep.sim_time == back.claimed_runtime
+
+
+# ---------------------------------------------------------------------- #
+# on-disk cache: hits skip compilation, keys version the compiler
+# ---------------------------------------------------------------------- #
+
+def test_cache_hit_skips_compiler(tmp_path, monkeypatch):
+    g = bidir_ring(5)
+    ScheduleCache(tmp_path).allgather(g, num_chunks=4)         # miss: compiles
+
+    def boom(*a, **kw):                                        # pragma: no cover
+        raise AssertionError("compiler invoked on cache hit")
+
+    monkeypatch.setattr("repro.core.schedule.compile_allgather", boom)
+    fresh = ScheduleCache(tmp_path)                            # new process sim
+    sched = fresh.allgather(bidir_ring(5, name="renamed"), num_chunks=4)
+    assert fresh.stats.hits == 1 and fresh.stats.misses == 0
+    assert simulate_allgather(sched).sim_time == sched.claimed_runtime
+
+
+def test_cache_distinguishes_params(tmp_path):
+    c = ScheduleCache(tmp_path)
+    c.allgather(ring(4), num_chunks=4)
+    c.allgather(ring(4), num_chunks=8)       # different P -> different entry
+    c.allgather(ring(5), num_chunks=4)       # different topo
+    assert c.stats.misses == 3 and len(c.entries()) == 3
+    c.allgather(ring(4), num_chunks=4)
+    assert c.stats.hits == 1
+
+
+def test_cache_compiler_version_invalidates(tmp_path):
+    old = ScheduleCache(tmp_path, compiler_fp="deadbeef00000000")
+    old.allgather(ring(4), num_chunks=4)
+    new = ScheduleCache(tmp_path)            # real fingerprint != deadbeef
+    new.allgather(ring(4), num_chunks=4)
+    assert new.stats.misses == 1             # stale entry ignored
+    assert len(new.entries()) == 2
+    assert new.prune_stale() == 1
+    assert len(new.entries()) == 1
+
+
+def test_cache_recovers_from_corrupt_artifact(tmp_path):
+    c = ScheduleCache(tmp_path)
+    sched = c.allgather(ring(4), num_chunks=4)
+    victim = c.path_for(c.key("allgather", ring(4), 4))
+    victim.write_text('{"format": "repro.schedule", "vers')   # torn write
+    fresh = ScheduleCache(tmp_path)
+    with pytest.warns(UserWarning, match="unreadable schedule artifact"):
+        again = fresh.allgather(ring(4), num_chunks=4)        # recompiles
+    assert fresh.stats.misses == 1 and fresh.stats.puts == 1
+    assert again.rounds == sched.rounds
+
+
+def test_cache_allreduce_and_broadcast(tmp_path):
+    c = ScheduleCache(tmp_path)
+    ar = c.allreduce(dragonfly(), num_chunks=4)
+    bc = c.broadcast(bidir_ring(6), root=2, num_chunks=4)
+    c2 = ScheduleCache(tmp_path)
+    assert c2.allreduce(dragonfly(), num_chunks=4).claimed_runtime == \
+        ar.claimed_runtime
+    assert c2.broadcast(bidir_ring(6), root=2, num_chunks=4).rounds == \
+        bc.rounds
+    # a different broadcast root is a different artifact
+    c2.broadcast(bidir_ring(6), root=0, num_chunks=4)
+    assert c2.stats.misses == 1
+
+
+def test_executor_consults_cache(tmp_path, monkeypatch):
+    from repro.comms import programs_for_topology
+    g = ring(4)
+    rs1, ag1 = programs_for_topology(g, num_chunks=4,
+                                     cache=ScheduleCache(tmp_path))
+    monkeypatch.setattr("repro.core.schedule.compile_allgather",
+                        lambda *a, **kw: pytest.fail("compiler on hit path"))
+    rs2, ag2 = programs_for_topology(g, num_chunks=4,
+                                     cache=ScheduleCache(tmp_path))
+
+    def sig(prog):
+        return [(c.perm, c.width, c.send_slots.tolist(),
+                 c.recv_slots.tolist()) for rnd in prog.rounds for c in rnd]
+
+    assert sig(rs1) == sig(rs2) and sig(ag1) == sig(ag2)
+
+
+# ---------------------------------------------------------------------- #
+# golden-schedule regressions
+# ---------------------------------------------------------------------- #
+
+GOLDENS = [
+    ("fig1a.allgather.p8.json", fig1a, 8),
+    ("bring8.allgather.p8.json", lambda: bidir_ring(8), 8),
+    ("two_cluster_3x6.allgather.p8.json",
+     lambda: two_cluster_switch(3, 6, 2), 8),
+]
+
+
+@pytest.mark.parametrize("fname,make,p", GOLDENS)
+def test_golden_roundtrip_and_claimed_optimum(fname, make, p):
+    text = (GOLDEN_DIR / fname).read_text()
+    sched = schedule_from_json(text)
+    # byte-stable round-trip of the checked-in artifact
+    assert schedule_to_json(sched) == text
+    # the golden schedule still verifies and hits its claimed exact runtime
+    rep = simulate_allgather(sched)
+    assert rep.sim_time == sched.claimed_runtime
+    assert sched.topo.fingerprint() == make().fingerprint()
+
+
+@pytest.mark.parametrize("fname,make,p", GOLDENS)
+def test_golden_matches_current_compiler(fname, make, p):
+    """Recompiling today must reproduce the checked-in bytes — any compiler
+    change that alters emitted schedules has to regenerate the goldens."""
+    sched = compile_allgather(make(), num_chunks=p)
+    assert schedule_to_json(sched) == (GOLDEN_DIR / fname).read_text()
+
+
+# ---------------------------------------------------------------------- #
+# sweep
+# ---------------------------------------------------------------------- #
+
+def test_sweep_registry_covers_new_families():
+    names = set(sweep_registry())
+    for required in ("hypercube3", "bcube2", "meshdgx2x2",
+                     "bring8_degraded", "torus3x3_failed"):
+        assert required in names
+    for name in SMOKE_NAMES:
+        assert name in names
+
+
+def test_sweep_smoke_emits_bench_json(tmp_path):
+    out = tmp_path / "BENCH_schedules.json"
+    doc = run_sweep(names=SMOKE_NAMES, jobs=1, out_path=str(out),
+                    cache_dir=str(tmp_path / "cache"))
+    on_disk = json.loads(out.read_text())
+    assert on_disk["format"] == "repro.bench_schedules"
+    assert on_disk["num_topologies"] == len(SMOKE_NAMES)
+    for e in doc["entries"]:
+        assert e["compile_time_s"] >= 0
+        assert e["num_chunks"] >= e["depth"]          # P >= depth enforced
+        assert Fraction(e["achieved_over_claimed"]) == 1
+        assert Fraction(e["achieved_runtime"]) == Fraction(e["claimed_runtime"])
+        assert Fraction(e["achieved_over_lb"]) >= 1
+        assert e["verified"]
+    # second sweep over the same cache dir: pure hit path, same results
+    doc2 = run_sweep(names=SMOKE_NAMES, jobs=1,
+                     cache_dir=str(tmp_path / "cache"))
+    for e1, e2 in zip(doc["entries"], doc2["entries"]):
+        assert e1["claimed_runtime"] == e2["claimed_runtime"]
+        assert e1["fingerprint"] == e2["fingerprint"]
+
+
+def test_checked_in_bench_is_current():
+    """The committed BENCH_schedules.json was produced by this compiler and
+    every entry reproduced its claimed runtime exactly."""
+    path = Path(__file__).parent.parent / "BENCH_schedules.json"
+    doc = json.loads(path.read_text())
+    assert doc["compiler"] == compiler_fingerprint()
+    assert doc["num_topologies"] == len(sweep_registry())
+    for e in doc["entries"]:
+        assert Fraction(e["achieved_over_claimed"]) == 1
+        assert e["num_chunks"] >= e["depth"]

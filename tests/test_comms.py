@@ -26,7 +26,10 @@ def run_snippet(code: str) -> str:
 def test_tree_collectives_match_references():
     print(run_snippet("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:  # older jax: experimental namespace
+            from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.topo import bidir_ring, fig1a, ring
         from repro.core.schedule import compile_allgather, compile_reduce_scatter
@@ -61,7 +64,10 @@ def test_tree_collectives_match_references():
 def test_multi_axis_hierarchical_allreduce():
     print(run_snippet("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:  # older jax: experimental namespace
+            from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.comms.mesh_axes import CollectiveContext
         from repro.comms.collectives import tree_all_reduce_multi
@@ -83,7 +89,10 @@ def test_multi_axis_hierarchical_allreduce():
 def test_bf16_reduce_scatter_f32_accumulation():
     print(run_snippet("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:  # older jax: experimental namespace
+            from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.topo import bidir_ring
         from repro.core.schedule import compile_reduce_scatter
@@ -109,7 +118,10 @@ def test_bf16_reduce_scatter_f32_accumulation():
 def test_bucketed_overlap_allreduce():
     print(run_snippet("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:  # older jax: experimental namespace
+            from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.topo import bidir_ring
         from repro.core.schedule import compile_allgather, \\

@@ -1,12 +1,16 @@
 """Unit + property tests for the paper's core: maxflow, optimality search,
-edge splitting, arborescence packing."""
+edge splitting, arborescence packing.
+
+Property tests run twice: a deterministic seeded-``random.Random`` pass that
+always runs, and a wider ``hypothesis`` pass that is skipped when the
+dependency is not installed (``pytest.importorskip``)."""
 import math
+import random
 from fractions import Fraction
 
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (DiGraph, FlowNetwork, allgather_inv_xstar,
                         brute_force_inv_xstar, choose_U_k, max_tree_depth,
@@ -72,10 +76,7 @@ def test_maxflow_limit_early_exit():
 # simplest_between (Prop 2 recovery)
 # ---------------------------------------------------------------------- #
 
-@given(st.fractions(min_value=0, max_value=50, max_denominator=200),
-       st.fractions(min_value=0, max_value=50, max_denominator=200))
-@settings(max_examples=80, deadline=None)
-def test_simplest_between_in_interval(a, b):
+def _check_simplest_between(a: Fraction, b: Fraction) -> None:
     lo, hi = min(a, b), max(a, b)
     r = simplest_between(lo, hi)
     assert lo <= r <= hi
@@ -85,6 +86,34 @@ def test_simplest_between_in_interval(a, b):
         lo_num = math.ceil(lo * den)
         assert lo_num > hi * den, \
             f"{lo_num}/{den} in [{lo},{hi}] beats {r}"
+
+
+def _random_bounded_fraction(rng: random.Random, max_value: int = 50,
+                             max_denominator: int = 200) -> Fraction:
+    den = rng.randint(1, max_denominator)
+    return Fraction(rng.randint(0, max_value * den), den)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_simplest_between_in_interval_seeded(seed):
+    rng = random.Random(seed)
+    for _ in range(10):
+        _check_simplest_between(_random_bounded_fraction(rng),
+                                _random_bounded_fraction(rng))
+
+
+def test_simplest_between_in_interval_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=80, deadline=None)
+    @hypothesis.given(
+        st.fractions(min_value=0, max_value=50, max_denominator=200),
+        st.fractions(min_value=0, max_value=50, max_denominator=200))
+    def check(a, b):
+        _check_simplest_between(a, b)
+
+    check()
 
 
 # ---------------------------------------------------------------------- #
@@ -201,6 +230,52 @@ def test_broadcast_packing():
     assert sum(c.mult for c in classes) == 2
     for c in classes:
         assert set(c.verts) == set(range(6))
+
+
+# ---------------------------------------------------------------------- #
+# randomized end-to-end properties (seeded random.Random — no hypothesis)
+# ---------------------------------------------------------------------- #
+
+def _random_eulerian_py(rng: random.Random, n_compute: int, n_switch: int,
+                        max_cap: int = 3) -> DiGraph:
+    """Pure-stdlib analogue of `_random_eulerian`: sum of random directed
+    cycles (always Eulerian), with one base cycle through every node so all
+    compute nodes are mutually reachable."""
+    n = n_compute + n_switch
+    base = list(range(n))
+    rng.shuffle(base)
+    cycles = [base]
+    for _ in range(rng.randint(1, 4)):
+        cycles.append(rng.sample(range(n), rng.randint(2, n)))
+    edges = {}
+    for cyc in cycles:
+        cap = rng.randint(1, max_cap)
+        for i in range(len(cyc)):
+            u, v = cyc[i], cyc[(i + 1) % len(cyc)]
+            if u != v:
+                edges[(u, v)] = edges.get((u, v), 0) + cap
+    return DiGraph(n, frozenset(range(n_compute)), edges, "pyrand")
+
+
+@pytest.mark.parametrize("seed", range(50))
+def test_random_topology_search_and_packing(seed):
+    """~50 random connected digraphs: the binary search matches the
+    exponential brute force, and the packing invariants hold after edge
+    splitting — the paper's §2 pipeline end to end."""
+    rng = random.Random(seed)
+    g = _random_eulerian_py(rng, n_compute=rng.randint(3, 5),
+                            n_switch=rng.randint(0, 2))
+    got = allgather_inv_xstar(g)
+    want = brute_force_inv_xstar(g)
+    assert got == want, f"seed {seed}: search {got} != brute {want}"
+    opt = solve_optimality(g)
+    scaled = g.scaled(opt.U)
+    if any(w in e for e in scaled.cap for w in scaled.switches):
+        split = remove_switches(scaled, opt.k, verify=True)
+    else:
+        split = trivial_split(scaled, opt.k)
+    classes = pack_arborescences(split.graph, opt.k)
+    verify_packing(split.graph, opt.k, classes)
 
 
 # ---------------------------------------------------------------------- #

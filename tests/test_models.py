@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCHS, reduced_config
 from repro.models import build_model
@@ -126,10 +125,7 @@ def test_ring_buffer_cache_matches_full_cache():
 # SSD property tests
 # ---------------------------------------------------------------------- #
 
-@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([16, 32, 64]),
-       st.sampled_from([1, 2]), st.sampled_from([4, 8]))
-@settings(max_examples=10, deadline=None)
-def test_ssd_chunked_equals_recurrence(seed, chunk, b, h):
+def _check_ssd_chunked_equals_recurrence(seed, chunk, b, h):
     key = jax.random.PRNGKey(seed)
     s, p, n = 2 * chunk, 8, 16
     ks = jax.random.split(key, 5)
@@ -146,17 +142,32 @@ def test_ssd_chunked_equals_recurrence(seed, chunk, b, h):
                                atol=2e-3, rtol=2e-3)
 
 
+@pytest.mark.parametrize("seed,chunk,b,h", [
+    (0, 16, 1, 4), (1, 32, 2, 8), (2, 64, 1, 8), (3, 16, 2, 4),
+])
+def test_ssd_chunked_equals_recurrence(seed, chunk, b, h):
+    _check_ssd_chunked_equals_recurrence(seed, chunk, b, h)
+
+
+def test_ssd_chunked_equals_recurrence_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(st.integers(0, 2 ** 31 - 1),
+                      st.sampled_from([16, 32, 64]),
+                      st.sampled_from([1, 2]), st.sampled_from([4, 8]))
+    def check(seed, chunk, b, h):
+        _check_ssd_chunked_equals_recurrence(seed, chunk, b, h)
+
+    check()
+
+
 # ---------------------------------------------------------------------- #
 # blockwise attention property tests
 # ---------------------------------------------------------------------- #
 
-@given(st.integers(0, 2 ** 31 - 1),
-       st.sampled_from([None, 64, 128]),
-       st.booleans(),
-       st.sampled_from([0, 16]),
-       st.sampled_from([None, 30.0]))
-@settings(max_examples=12, deadline=None)
-def test_blockwise_matches_direct(seed, window, causal, prefix, cap):
+def _check_blockwise_matches_direct(seed, window, causal, prefix, cap):
     if not causal:
         window = None
     key = jax.random.PRNGKey(seed)
@@ -172,3 +183,30 @@ def test_blockwise_matches_direct(seed, window, causal, prefix, cap):
                             block_q=64, block_kv=64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("seed,window,causal,prefix,cap", [
+    (0, None, True, 0, None),
+    (1, 64, True, 16, None),
+    (2, 128, True, 0, 30.0),
+    (3, None, False, 16, None),
+    (4, None, True, 16, 30.0),
+])
+def test_blockwise_matches_direct(seed, window, causal, prefix, cap):
+    _check_blockwise_matches_direct(seed, window, causal, prefix, cap)
+
+
+def test_blockwise_matches_direct_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=12, deadline=None)
+    @hypothesis.given(st.integers(0, 2 ** 31 - 1),
+                      st.sampled_from([None, 64, 128]),
+                      st.booleans(),
+                      st.sampled_from([0, 16]),
+                      st.sampled_from([None, 30.0]))
+    def check(seed, window, causal, prefix, cap):
+        _check_blockwise_matches_direct(seed, window, causal, prefix, cap)
+
+    check()

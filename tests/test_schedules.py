@@ -5,7 +5,6 @@ from fractions import Fraction
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (compile_allgather, compile_allreduce,
                         compile_broadcast, compile_reduce_scatter,
@@ -15,12 +14,15 @@ from repro.core import (compile_allgather, compile_allreduce,
                         simulate_reduce_scatter, solve_optimality,
                         theorem19_rs_ag_optimal)
 from repro.core.graph import DiGraph
-from repro.topo import (bidir_ring, dgx_box, dragonfly, fat_tree, fig1a,
-                        fully_connected, ring, star_switch, torus_2d)
+from repro.core.schedule import Send
+from repro.topo import (bcube, bidir_ring, dgx_box, dragonfly, fat_tree,
+                        fig1a, fully_connected, hypercube, mesh_of_dgx, ring,
+                        star_switch, torus_2d)
 
 ZOO = [fig1a, lambda: ring(6), lambda: bidir_ring(5),
        lambda: torus_2d(3, 3), fat_tree, dragonfly, dgx_box,
-       lambda: star_switch(5), lambda: fully_connected(4)]
+       lambda: star_switch(5), lambda: fully_connected(4),
+       lambda: hypercube(3), lambda: bcube(2), lambda: mesh_of_dgx(2, 2, 2)]
 
 
 @pytest.mark.parametrize("make", ZOO)
@@ -39,6 +41,24 @@ def test_reduce_scatter_verified(make):
     g = make()
     rep = simulate_reduce_scatter(compile_reduce_scatter(g, num_chunks=16))
     assert rep.ratio < 2.0
+
+
+@pytest.mark.parametrize("make", ZOO)
+def test_rs_ag_duality(make):
+    """Appendix B / Zhao et al. duality: the compiled reduce-scatter on G is
+    exactly the allgather compiled on G^T with every send reversed and the
+    round order flipped — for every zoo topology."""
+    g = make()
+    rs = compile_reduce_scatter(g, num_chunks=8)
+    ag = compile_allgather(g.transpose(), num_chunks=8)
+    assert rs.opt == ag.opt
+    assert rs.dstar.cap == ag.dstar.transpose().cap
+    assert rs.class_slot_offset == ag.class_slot_offset
+    want = [[Send(src=s.dst, dst=s.src, root=s.root, slot=s.slot, cls=s.cls)
+             for s in rnd] for rnd in reversed(ag.rounds)]
+    assert rs.rounds == want
+    # both sides claim the same exact optimal bound
+    assert rs.lb_runtime_factor() == ag.lb_runtime_factor()
 
 
 @pytest.mark.parametrize("make", [fig1a, lambda: ring(5), dragonfly])
