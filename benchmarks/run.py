@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   pipeline_convergence — §1.3: achieved/optimal ratio vs chunk count
   zoo_optimality       — eq (1) + achieved ratio across the topology zoo
   allreduce_rs_ag      — App. B: RS+AG vs RE+BC runtime factors
+  broadcast_reduce_family — App. A single-root broadcast + reversed reduce
+                         vs the eq (5) bound M/λ(root)
   schedule_gen_scaling — §3: strongly-polynomial generation time vs size
   schedule_sweep       — compile+verify the full topology zoo in parallel,
                          emitting BENCH_schedules.json (see repro.cache.sweep)
@@ -29,9 +31,11 @@ from fractions import Fraction
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import (allgather_inv_xstar, compile_allgather,
-                        compile_allreduce, re_bc_allreduce_runtime,
-                        rs_ag_allreduce_runtime, simulate_allgather,
-                        simulate_allreduce, solve_optimality)
+                        compile_allreduce, compile_broadcast, compile_reduce,
+                        re_bc_allreduce_runtime, rs_ag_allreduce_runtime,
+                        simulate_allgather, simulate_allreduce,
+                        simulate_broadcast, simulate_reduce,
+                        solve_optimality)
 from repro.topo import (bidir_ring, dgx_box, dragonfly, fat_tree, fig1a,
                         fig1d_ring_unwound, multipod_topology, ring,
                         star_switch, torus_2d, two_cluster_switch)
@@ -92,6 +96,19 @@ def allreduce_rs_ag() -> None:
             f"rs_ag={rs_ag};re_bc={re_bc};"
             f"re_bc/rs_ag={float(re_bc / rs_ag):.2f};"
             f"achieved_ratio={float(rep.ratio):.3f}")
+
+
+def broadcast_reduce_family() -> None:
+    """Appendix A + dual: single-root broadcast/reduce across topologies,
+    converging to the eq (5) bound M/λ(root)."""
+    for g in (fig1a(), bidir_ring(8), dragonfly(), star_switch(8)):
+        root = min(g.compute)
+        bc, us = timed(compile_broadcast, g, root, num_chunks=32)
+        rep_bc = simulate_broadcast(bc)
+        rep_red = simulate_reduce(compile_reduce(g, root, num_chunks=32))
+        row(f"broadcast_reduce.{g.name}", us,
+            f"lambda={bc.k};bc_ratio={float(rep_bc.ratio):.4f};"
+            f"red_ratio={float(rep_red.ratio):.4f}")
 
 
 def schedule_gen_scaling() -> None:
@@ -184,7 +201,9 @@ def jax_collectives() -> None:
         print(out.stdout.strip(), flush=True)
 
 
-def main(argv: list[str] | None = None) -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The benchmark CLI (exposed separately so tools/check_docs.py can
+    assert the documented flags match)."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="3-topology schedule sweep only (<60s, CI)")
@@ -196,7 +215,11 @@ def main(argv: list[str] | None = None) -> None:
                          "committed full-sweep scoreboard is never clobbered)")
     ap.add_argument("--cache-dir", default=None,
                     help="schedule artifact cache dir for the sweep")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> None:
+    args = build_parser().parse_args(argv)
     if args.out is None:
         from repro.cache import default_out_path
         args.out = default_out_path(partial=args.smoke)
@@ -209,6 +232,7 @@ def main(argv: list[str] | None = None) -> None:
     pipeline_convergence()
     zoo_optimality()
     allreduce_rs_ag()
+    broadcast_reduce_family()
     schedule_gen_scaling()
     schedule_sweep(args.out, cache_dir=args.cache_dir)
     jax_collectives()

@@ -23,7 +23,10 @@ from typing import Optional
 from repro.core.graph import DiGraph
 
 # Bump when the JSON schema in serialize.py changes incompatibly.
-FORMAT_VERSION = 1
+# v2: schedule payloads carry an explicit `root` field (single-root
+# broadcast/reduce kinds; null for allgather/reduce-scatter), and the kind
+# vocabulary grew to {allgather, reduce_scatter, broadcast, reduce}.
+FORMAT_VERSION = 2
 
 # Modules whose behaviour determines what a compiled schedule looks like.
 _COMPILER_MODULES = (

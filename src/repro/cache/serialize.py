@@ -35,6 +35,10 @@ from .fingerprint import FORMAT_VERSION
 SCHEDULE_FORMAT = "repro.schedule"
 ALLREDUCE_FORMAT = "repro.allreduce"
 
+# every kind a `repro.schedule` payload may carry (allreduce artifacts are
+# the nested `repro.allreduce` format: an rs + an ag payload)
+SCHEDULE_KINDS = ("allgather", "reduce_scatter", "broadcast", "reduce")
+
 
 class SerializationError(ValueError):
     pass
@@ -77,7 +81,8 @@ def ensure_claimed(sched: PipelineSchedule, verify: bool = False) -> Fraction:
         from repro.core import simulate as sim
         fn = {"allgather": sim.simulate_allgather,
               "reduce_scatter": sim.simulate_reduce_scatter,
-              "broadcast": sim.simulate_broadcast}[sched.kind]
+              "broadcast": sim.simulate_broadcast,
+              "reduce": sim.simulate_reduce}[sched.kind]
         sched.claimed_runtime = fn(sched, verify=verify).sim_time
     return sched.claimed_runtime
 
@@ -89,6 +94,7 @@ def schedule_to_payload(sched: PipelineSchedule,
         "format": SCHEDULE_FORMAT,
         "version": FORMAT_VERSION,
         "kind": sched.kind,
+        "root": sched.root,
         "num_chunks": sched.num_chunks,
         "claimed_runtime": _enc_frac(claimed),
         "opt": {"inv_x_star": _enc_frac(sched.opt.inv_x_star),
@@ -120,6 +126,8 @@ def payload_to_schedule(d: Dict[str, Any]) -> PipelineSchedule:
     if d.get("version") != FORMAT_VERSION:
         raise SerializationError(
             f"schedule format version {d.get('version')} != {FORMAT_VERSION}")
+    if d.get("kind") not in SCHEDULE_KINDS:
+        raise SerializationError(f"unknown schedule kind {d.get('kind')!r}")
     opt = Optimality(inv_x_star=_dec_frac(d["opt"]["inv_x_star"]),
                      U=_dec_frac(d["opt"]["U"]), k=d["opt"]["k"])
     sp = d["split"]

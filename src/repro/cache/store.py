@@ -48,19 +48,32 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     puts: int = 0
+    evictions: int = 0
 
     def describe(self) -> str:
-        return f"hits={self.hits} misses={self.misses} puts={self.puts}"
+        return (f"hits={self.hits} misses={self.misses} puts={self.puts} "
+                f"evictions={self.evictions}")
 
 
 class ScheduleCache:
+    """Content-addressed on-disk store of compiled schedule artifacts.
+
+    One artifact per file; the filename is the cache key (kind × graph
+    fingerprint × chunk count × compiler fingerprint).  `max_bytes` turns on
+    size-capped LRU eviction: every disk hit refreshes the artifact's mtime,
+    and after each write the least-recently-used artifacts are deleted until
+    the directory fits the cap (the just-written artifact is never evicted,
+    so a single oversized schedule still caches)."""
+
     def __init__(self, root: Union[str, Path, None] = None,
                  compiler_fp: Optional[str] = None,
-                 verify_on_compile: bool = False):
+                 verify_on_compile: bool = False,
+                 max_bytes: Optional[int] = None):
         self.root = Path(root if root is not None else default_cache_dir())
         self.root.mkdir(parents=True, exist_ok=True)
         self.compiler_fp = compiler_fp or compiler_fingerprint()
         self.verify_on_compile = verify_on_compile
+        self.max_bytes = max_bytes
         self.stats = CacheStats()
         self._memory: Dict[str, Artifact] = {}
 
@@ -79,6 +92,7 @@ class ScheduleCache:
     def _load(self, key: str, allreduce: bool) -> Optional[Artifact]:
         if key in self._memory:
             self.stats.hits += 1
+            self._touch(key)          # memory hits still count as LRU use
             return self._memory[key]
         path = self.path_for(key)
         if not path.exists():
@@ -100,9 +114,18 @@ class ScheduleCache:
                 pass
             self.stats.misses += 1
             return None
+        self._touch(key)              # LRU recency = file mtime
         self._memory[key] = art
         self.stats.hits += 1
         return art
+
+    def _touch(self, key: str) -> None:
+        if self.max_bytes is None:
+            return
+        try:
+            os.utime(self.path_for(key))
+        except OSError:
+            pass
 
     def _store(self, key: str, art: Artifact) -> None:
         text = (allreduce_to_json(art) if isinstance(art, AllReduceSchedule)
@@ -119,6 +142,46 @@ class ScheduleCache:
             raise
         self._memory[key] = art
         self.stats.puts += 1
+        if self.max_bytes is not None:
+            self._evict_lru(keep=path)
+
+    def size_bytes(self) -> int:
+        """Total bytes of artifacts currently on disk (concurrent deletions
+        by other processes are skipped, like in `_evict_lru`)."""
+        total = 0
+        for p in self.root.glob("*.json"):
+            try:
+                total += p.stat().st_size
+            except OSError:
+                continue
+        return total
+
+    def _evict_lru(self, keep: Path) -> int:
+        """Delete least-recently-used artifacts until the directory fits
+        `max_bytes`.  `keep` (the artifact just written) is exempt."""
+        files = []
+        for p in self.root.glob("*.json"):
+            try:
+                st = p.stat()
+            except OSError:
+                continue
+            files.append((st.st_mtime, st.st_size, p))
+        total = sum(sz for _, sz, _ in files)
+        removed = 0
+        for _, sz, p in sorted(files):
+            if total <= self.max_bytes:
+                break
+            if p == keep:
+                continue
+            try:
+                p.unlink()
+            except OSError:
+                continue
+            self._memory.pop(p.stem, None)
+            total -= sz
+            removed += 1
+            self.stats.evictions += 1
+        return removed
 
     # ------------------------------------------------------------------ #
     # cached compilers
@@ -167,7 +230,20 @@ class ScheduleCache:
         if hit is not None:
             return hit
         sched = schedule_mod.compile_broadcast(topo, root=root,
-                                               num_chunks=num_chunks)
+                                               num_chunks=num_chunks,
+                                               verify=self.verify_on_compile)
+        self._store(key, sched)
+        return sched
+
+    def reduce(self, topo: DiGraph, root: int,
+               num_chunks: int = 8) -> PipelineSchedule:
+        key = self.key("reduce", topo, num_chunks, root=root)
+        hit = self._load(key, allreduce=False)
+        if hit is not None:
+            return hit
+        sched = schedule_mod.compile_reduce(topo, root=root,
+                                            num_chunks=num_chunks,
+                                            verify=self.verify_on_compile)
         self._store(key, sched)
         return sched
 

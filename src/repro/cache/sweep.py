@@ -1,15 +1,26 @@
-"""Topology-zoo sweep: compile + simulate + verify every topology, emit
-`BENCH_schedules.json` — the repo's schedule-quality scoreboard.
+"""Topology-zoo sweep: compile + simulate + verify the full collective
+family on every topology, emit `BENCH_schedules.json` — the repo's
+schedule-quality scoreboard.
 
-Every entry records compile time, the exact optimal bound 1/x*, the
-schedule's claimed pipelined runtime, the re-simulated achieved runtime and
-their exact ratio (``achieved_over_claimed`` must be "1": the verifier
-replays every chunk, so a schedule that does not reproduce its claim fails
-the sweep).  ``achieved_over_lb`` tracks convergence to the asymptotic
-bound as the chunk count grows.
+Every (topology, collective) entry records compile time, the exact optimal
+bound for that collective, the schedule's claimed pipelined runtime, the
+re-simulated achieved runtime and their exact ratio
+(``achieved_over_claimed`` must be "1": the verifier replays every chunk, so
+a schedule that does not reproduce its claim fails the sweep).
+``achieved_over_lb`` tracks convergence to the asymptotic bound as the chunk
+count grows.
 
-Runs topologies in parallel with `concurrent.futures`; pass a cache dir to
-make repeated sweeps (and any launch that follows) skip compilation.
+Collectives swept (``--collectives`` selects a subset):
+
+  allgather / reduce_scatter — §2.1-2.3 construction and its transpose dual
+  broadcast / reduce         — Appendix A rooted trees (root = first compute
+                               node) and the edge-reversed reduction
+  allreduce                  — Appendix B RS+AG composition, cached as one
+                               artifact
+
+Runs (topology, collective) pairs in parallel with `concurrent.futures`;
+pass a cache dir to make repeated sweeps (and any launch that follows) skip
+compilation.
 
     PYTHONPATH=src python -m repro.cache.sweep --out BENCH_schedules.json
     PYTHONPATH=src python -m repro.cache.sweep --smoke   # 3 topologies, <60s
@@ -36,7 +47,10 @@ from repro.topo import (bcube, bidir_ring, degrade_link, dgx_box, dragonfly,
 from .fingerprint import compiler_fingerprint
 
 BENCH_FORMAT = "repro.bench_schedules"
+BENCH_VERSION = 2
 SMOKE_NAMES = ("ring8", "hypercube3", "fig1a")
+COLLECTIVES = ("allgather", "reduce_scatter", "broadcast", "reduce",
+               "allreduce")
 
 
 def default_out_path(partial: bool) -> str:
@@ -46,9 +60,9 @@ def default_out_path(partial: bool) -> str:
 
 
 def claim_mismatches(doc: Dict[str, Any]) -> List[str]:
-    """Names of entries whose re-simulated runtime != the claimed runtime."""
-    return [e["name"] for e in doc["entries"]
-            if e["achieved_over_claimed"] != "1"]
+    """Entries whose re-simulated runtime != the claimed runtime."""
+    return [f"{e['name']}:{e.get('kind', 'allgather')}"
+            for e in doc["entries"] if e["achieved_over_claimed"] != "1"]
 
 
 def sweep_registry() -> Dict[str, Callable[[], DiGraph]]:
@@ -80,49 +94,83 @@ def sweep_registry() -> Dict[str, Callable[[], DiGraph]]:
     }
 
 
-def sweep_one(name: str, num_chunks: int = 16,
-              cache_dir: Optional[str] = None) -> Dict[str, Any]:
-    """Compile (P >= depth enforced), verify chunk-by-chunk, simulate."""
-    g = sweep_registry()[name]()
+def _compile(kind: str, g: DiGraph, num_chunks: int,
+             cache_dir: Optional[str], root: Optional[int]):
+    if cache_dir:
+        from .store import ScheduleCache
+        cache = ScheduleCache(cache_dir)
+        if kind in ("broadcast", "reduce"):
+            return getattr(cache, kind)(g, root=root, num_chunks=num_chunks)
+        return getattr(cache, kind)(g, num_chunks=num_chunks)
+    if kind in ("broadcast", "reduce"):
+        return getattr(schedule_mod, f"compile_{kind}")(
+            g, root=root, num_chunks=num_chunks)
+    return getattr(schedule_mod, f"compile_{kind}")(g, num_chunks=num_chunks)
 
-    def compiled(p: int):
-        if cache_dir:
-            from .store import ScheduleCache
-            return ScheduleCache(cache_dir).allgather(g, num_chunks=p)
-        return schedule_mod.compile_allgather(g, num_chunks=p)
+
+_SIMULATORS = {
+    "allgather": sim.simulate_allgather,
+    "reduce_scatter": sim.simulate_reduce_scatter,
+    "broadcast": sim.simulate_broadcast,
+    "reduce": sim.simulate_reduce,
+    "allreduce": sim.simulate_allreduce,
+}
+
+
+def _depth(sched) -> int:
+    if isinstance(sched, schedule_mod.AllReduceSchedule):
+        return max(sched.rs.depth, sched.ag.depth)
+    return sched.depth
+
+
+def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
+              cache_dir: Optional[str] = None) -> Dict[str, Any]:
+    """Compile one (topology, collective) pair (P >= depth enforced), verify
+    chunk-by-chunk, simulate, and return a scoreboard entry."""
+    g = sweep_registry()[name]()
+    root = min(g.compute) if kind in ("broadcast", "reduce") else None
 
     t0 = time.perf_counter()
-    sched = compiled(num_chunks)
-    if sched.depth > num_chunks:       # acceptance requires P >= tree depth
-        sched = compiled(sched.depth)
+    sched = _compile(kind, g, num_chunks, cache_dir, root)
+    if _depth(sched) > num_chunks:     # acceptance requires P >= tree depth
+        sched = _compile(kind, g, _depth(sched), cache_dir, root)
     compile_time = time.perf_counter() - t0
 
-    rep = sim.simulate_allgather(sched, verify=True)   # replays every chunk
+    rep = _SIMULATORS[kind](sched, verify=True)   # replays every chunk
     achieved = rep.sim_time
     # Cache path: `claimed` was recorded in the artifact at compile time, so
     # achieved == claimed is a real replay-fidelity check.  Fresh-compile
     # path: adopt the verified run as the claim (simulating twice in one
     # process would only compare the simulator against itself).
-    if sched.claimed_runtime is None:
-        sched.claimed_runtime = achieved
     claimed = sched.claimed_runtime
+    if claimed is None:
+        claimed = achieved
     lb = rep.lb_time
+    if isinstance(sched, schedule_mod.AllReduceSchedule):
+        opt, num_p = sched.rs.opt, sched.rs.num_chunks
+        rounds = len(sched.rs.rounds) + len(sched.ag.rounds)
+        sends = sched.rs.total_sends() + sched.ag.total_sends()
+    else:
+        opt, num_p = sched.opt, sched.num_chunks
+        rounds, sends = len(sched.rounds), sched.total_sends()
     return {
         "name": name,
+        "kind": kind,
+        "root": root,
         "topology": g.name,
         "fingerprint": g.fingerprint(),
         "num_nodes": g.num_nodes,
         "num_compute": g.num_compute,
         "num_switches": len(g.switches),
         "num_edges": len(g.cap),
-        "num_chunks": sched.num_chunks,
+        "num_chunks": num_p,
         "compile_time_s": round(compile_time, 6),
-        "inv_x_star": str(sched.opt.inv_x_star),
-        "U": str(sched.opt.U),
-        "k": sched.opt.k,
-        "depth": sched.depth,
-        "rounds": len(sched.rounds),
-        "total_sends": sched.total_sends(),
+        "inv_x_star": str(opt.inv_x_star),
+        "U": str(opt.U),
+        "k": opt.k,
+        "depth": _depth(sched),
+        "rounds": rounds,
+        "total_sends": sends,
         "lb_runtime": str(lb),
         "claimed_runtime": str(claimed),
         "achieved_runtime": str(achieved),
@@ -135,27 +183,35 @@ def sweep_one(name: str, num_chunks: int = 16,
 
 def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
               jobs: Optional[int] = None, cache_dir: Optional[str] = None,
-              out_path: Optional[str] = None) -> Dict[str, Any]:
+              out_path: Optional[str] = None,
+              collectives: Optional[Sequence[str]] = None) -> Dict[str, Any]:
     names = list(names if names is not None else sweep_registry())
     unknown = [n for n in names if n not in sweep_registry()]
     if unknown:
         raise KeyError(f"unknown sweep topologies: {unknown}")
-    jobs = jobs if jobs is not None else min(len(names),
+    collectives = list(collectives if collectives is not None else COLLECTIVES)
+    bad_kinds = [c for c in collectives if c not in COLLECTIVES]
+    if bad_kinds:
+        raise KeyError(f"unknown collectives: {bad_kinds}")
+    pairs = [(n, c) for n in names for c in collectives]
+    jobs = jobs if jobs is not None else min(len(pairs),
                                              max(1, (os.cpu_count() or 2)))
-    if jobs <= 1 or len(names) <= 1:
-        entries = [sweep_one(n, num_chunks, cache_dir) for n in names]
+    if jobs <= 1 or len(pairs) <= 1:
+        entries = [sweep_one(n, c, num_chunks, cache_dir) for n, c in pairs]
     else:
         with concurrent.futures.ProcessPoolExecutor(max_workers=jobs) as ex:
-            futs = {ex.submit(sweep_one, n, num_chunks, cache_dir): n
-                    for n in names}
+            futs = {ex.submit(sweep_one, n, c, num_chunks, cache_dir): (n, c)
+                    for n, c in pairs}
             entries = [f.result() for f in futs]
-    entries.sort(key=lambda e: e["name"])
+    entries.sort(key=lambda e: (e["name"], COLLECTIVES.index(e["kind"])))
     doc = {
         "format": BENCH_FORMAT,
-        "version": 1,
+        "version": BENCH_VERSION,
         "compiler": compiler_fingerprint(),
         "num_chunks": num_chunks,
-        "num_topologies": len(entries),
+        "collectives": collectives,
+        "num_topologies": len(names),
+        "num_entries": len(entries),
         "entries": entries,
     }
     if out_path:
@@ -165,11 +221,17 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
     return doc
 
 
-def main(argv: Optional[Sequence[str]] = None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The sweep CLI (exposed separately so tools/check_docs.py can assert
+    the documented flags match)."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help=f"only the 3 small smoke topologies {SMOKE_NAMES}")
     ap.add_argument("--names", nargs="*", default=None)
+    ap.add_argument("--collectives", nargs="*", default=None,
+                    choices=list(COLLECTIVES),
+                    help="collective kinds to sweep (default: all of "
+                         f"{COLLECTIVES})")
     ap.add_argument("--chunks", type=int, default=16)
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--cache-dir", default=None)
@@ -178,14 +240,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "partial run — --smoke/--names — defaults to "
                          "BENCH_schedules.smoke.json so the committed "
                          "full-sweep scoreboard is never clobbered)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
     names = list(SMOKE_NAMES) if args.smoke else args.names
     if args.out is None:
         args.out = default_out_path(partial=names is not None)
     doc = run_sweep(names=names, num_chunks=args.chunks, jobs=args.jobs,
-                    cache_dir=args.cache_dir, out_path=args.out)
+                    cache_dir=args.cache_dir, out_path=args.out,
+                    collectives=args.collectives)
     for e in doc["entries"]:
-        print(f"{e['name']},{e['compile_time_s'] * 1e6:.1f},"
+        print(f"{e['name']}.{e['kind']},{e['compile_time_s'] * 1e6:.1f},"
               f"inv_x*={e['inv_x_star']};k={e['k']};depth={e['depth']};"
               f"claimed={e['claimed_runtime']};"
               f"achieved/claimed={e['achieved_over_claimed']};"
@@ -194,8 +261,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if bad:
         print(f"FAIL: achieved != claimed for {bad}", file=sys.stderr)
         return 1
-    print(f"wrote {args.out}: {doc['num_topologies']} topologies, "
-          f"compiler {doc['compiler']}")
+    print(f"wrote {args.out}: {doc['num_topologies']} topologies x "
+          f"{len(doc['collectives'])} collectives = {doc['num_entries']} "
+          f"entries, compiler {doc['compiler']}")
     return 0
 
 

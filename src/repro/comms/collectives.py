@@ -120,6 +120,63 @@ def tree_reduce_scatter(x: jax.Array, prog: PermuteProgram, axis_name: str,
 
 
 # ---------------------------------------------------------------------- #
+# broadcast / reduce (paper Appendix A and its edge-reversed dual)
+# ---------------------------------------------------------------------- #
+
+def tree_broadcast(x: jax.Array, prog: PermuteProgram, axis_name: str
+                   ) -> jax.Array:
+    """Bandwidth-optimal pipelined broadcast of the root's buffer `x`.
+
+    Every device passes an `x` of the same shape (non-root values are
+    ignored, matching MPI_Bcast); every device returns the root's `x`.
+    The schedule's store-and-forward discipline guarantees non-root data
+    never propagates: a device only ever sends chunks it received."""
+    if prog.kind != "broadcast":
+        raise ValueError(f"program kind {prog.kind} != broadcast")
+    a, s = prog.axis_size, prog.slots_per_shard
+    root = prog.root
+    shard_elems = int(np.prod(x.shape)) if x.ndim else 1
+    ce = _chunk_elems(shard_elems, s)
+    flat = jnp.ravel(x)
+    flat = jnp.pad(flat, (0, s * ce - shard_elems))
+    buf = jnp.zeros((a * s + 1, ce), dtype=x.dtype)
+    # slot layout matches the executor: the root's chunks live at
+    # [root*s, (root+1)*s); every device stages its own copy there (only the
+    # root's is ever forwarded)
+    buf = jax.lax.dynamic_update_slice_in_dim(
+        buf, flat.reshape(s, ce), root * s, axis=0)
+    buf = _run_program(buf, prog, axis_name, mode="set")
+    out = jax.lax.dynamic_slice_in_dim(buf, root * s, s, axis=0)
+    return out.reshape(s * ce)[:shard_elems].reshape(x.shape)
+
+
+def tree_reduce(x: jax.Array, prog: PermuteProgram, axis_name: str,
+                *, accum_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """Bandwidth-optimal pipelined reduce (sum) of `x` to the root.
+
+    Every device contributes its `x`; the return value equals Σ_devices x on
+    the root device and an intermediate partial elsewhere (MPI_Reduce
+    semantics).  Accumulation happens at every tree hop (op fusion): each
+    device forwards one partial per chunk slot, never raw operands."""
+    if prog.kind != "reduce":
+        raise ValueError(f"program kind {prog.kind} != reduce")
+    a, s = prog.axis_size, prog.slots_per_shard
+    root = prog.root
+    shard_elems = int(np.prod(x.shape)) if x.ndim else 1
+    ce = _chunk_elems(shard_elems, s)
+    compute_dtype = accum_dtype or (
+        jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype)
+    flat = jnp.ravel(x).astype(compute_dtype)
+    flat = jnp.pad(flat, (0, s * ce - shard_elems))
+    buf = jnp.zeros((a * s + 1, ce), dtype=compute_dtype)
+    buf = jax.lax.dynamic_update_slice_in_dim(
+        buf, flat.reshape(s, ce), root * s, axis=0)
+    buf = _run_program(buf, prog, axis_name, mode="add")
+    out = jax.lax.dynamic_slice_in_dim(buf, root * s, s, axis=0)
+    return out.reshape(s * ce)[:shard_elems].reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
 # allreduce = RS + AG (paper Appendix B)
 # ---------------------------------------------------------------------- #
 

@@ -47,6 +47,7 @@ class PermuteProgram:
     num_slots: int                 # N * slots_per_shard (+1 trash row extra)
     slots_per_shard: int           # k * P
     rounds: Tuple[Tuple[PermuteCall, ...], ...]
+    root: Optional[int] = None     # single root (broadcast/reduce kinds)
 
     @property
     def num_calls(self) -> int:
@@ -117,7 +118,7 @@ def compile_program(sched: PipelineSchedule) -> PermuteProgram:
         rounds.append(tuple(calls))
     return PermuteProgram(kind=sched.kind, axis_size=a,
                           num_slots=a * s, slots_per_shard=s,
-                          rounds=tuple(rounds))
+                          rounds=tuple(rounds), root=sched.root)
 
 
 # ---------------------------------------------------------------------- #
@@ -125,19 +126,42 @@ def compile_program(sched: PipelineSchedule) -> PermuteProgram:
 # ---------------------------------------------------------------------- #
 
 def schedules_for_topology(topo: DiGraph, num_chunks: int = 8,
-                           fixed_k: Optional[int] = None, cache=None
-                           ) -> Tuple[PipelineSchedule, PipelineSchedule]:
-    """(allgather, reduce_scatter) schedules for `topo`, consulting a
+                           fixed_k: Optional[int] = None, cache=None,
+                           kind: Optional[str] = None,
+                           root: Optional[int] = None):
+    """Schedule artifacts for `topo`, consulting a
     `repro.cache.ScheduleCache` first when one is given — a hit replays the
-    serialized artifact and never invokes the compiler."""
+    serialized artifact and never invokes the compiler.
+
+    kind selects the collective:
+      None             — legacy pair: (allgather, reduce_scatter)
+      "allgather" / "reduce_scatter" — one PipelineSchedule
+      "broadcast" / "reduce"         — one PipelineSchedule; `root` required
+      "allreduce"      — one AllReduceSchedule (RS + AG sharing one cached
+                         artifact)
+    """
+    if kind is None:
+        return (schedules_for_topology(topo, num_chunks, fixed_k, cache,
+                                       kind="allgather"),
+                schedules_for_topology(topo, num_chunks, fixed_k, cache,
+                                       kind="reduce_scatter"))
+    if kind in ("broadcast", "reduce"):
+        if root is None:
+            raise ValueError(f"{kind} schedules need an explicit root")
+        if cache is not None:
+            return getattr(cache, kind)(topo, root=root,
+                                        num_chunks=num_chunks)
+        from repro.core import schedule as schedule_mod
+        return getattr(schedule_mod, f"compile_{kind}")(
+            topo, root=root, num_chunks=num_chunks)
+    if kind not in ("allgather", "reduce_scatter", "allreduce"):
+        raise ValueError(f"unknown collective kind {kind!r}")
     if cache is not None:
-        return (cache.allgather(topo, num_chunks=num_chunks, fixed_k=fixed_k),
-                cache.reduce_scatter(topo, num_chunks=num_chunks,
-                                     fixed_k=fixed_k))
-    from repro.core.schedule import compile_allgather, compile_reduce_scatter
-    return (compile_allgather(topo, num_chunks=num_chunks, fixed_k=fixed_k),
-            compile_reduce_scatter(topo, num_chunks=num_chunks,
-                                   fixed_k=fixed_k))
+        return getattr(cache, kind)(topo, num_chunks=num_chunks,
+                                    fixed_k=fixed_k)
+    from repro.core import schedule as schedule_mod
+    return getattr(schedule_mod, f"compile_{kind}")(
+        topo, num_chunks=num_chunks, fixed_k=fixed_k)
 
 
 def programs_for_topology(topo: DiGraph, num_chunks: int = 8,
@@ -146,5 +170,7 @@ def programs_for_topology(topo: DiGraph, num_chunks: int = 8,
     """(rs_prog, ag_prog) — the argument order `tree_all_reduce` expects."""
     ag, rs = schedules_for_topology(topo, num_chunks, fixed_k, cache)
     return compile_program(rs), compile_program(ag)
+
+
 
 

@@ -48,6 +48,8 @@ class CollectiveContext:
         self.schedule_cache = schedule_cache  # Optional[ScheduleCache]
         self._topologies = dict(topologies or {})
         self._cache: Dict[str, AxisSchedules] = {}
+        self._allreduce: Dict[str, object] = {}
+        self._broadcast: Dict[Tuple[str, int], PermuteProgram] = {}
 
     def topology(self, axis: str) -> DiGraph:
         if axis not in self._topologies:
@@ -66,6 +68,41 @@ class CollectiveContext:
                 ag_sched=ag, rs_sched=rs,
                 ag_prog=compile_program(ag), rs_prog=compile_program(rs))
         return self._cache[axis]
+
+    def allreduce_schedule(self, axis: str):
+        """The composed RS+AG `AllReduceSchedule` for one axis, fetched (or
+        compiled into) the schedule cache as a single `repro.allreduce`
+        artifact — the entry `BucketedAllReduce` consumers replay."""
+        if axis not in self._allreduce:
+            self._allreduce[axis] = schedules_for_topology(
+                self.topology(axis), num_chunks=self.num_chunks,
+                fixed_k=self.fixed_k, cache=self.schedule_cache,
+                kind="allreduce")
+        return self._allreduce[axis]
+
+    def bucketed_allreduce(self, axis: str, bucket_bytes: int = 64 << 20,
+                           **kwargs):
+        """A `BucketedAllReduce` gradient hook for `axis`, lowered from the
+        axis's single cached allreduce artifact.  `wire_dtype` (and any
+        other `BucketedAllReduce.from_schedule` option) passes through, so
+        the bf16 wire-compression default is the same on both construction
+        paths."""
+        from .overlap import BucketedAllReduce
+        return BucketedAllReduce.from_schedule(
+            self.allreduce_schedule(axis), axis_name=axis,
+            bucket_bytes=bucket_bytes, **kwargs)
+
+    def broadcast_program(self, axis: str, root: int = 0) -> PermuteProgram:
+        """Executable single-root broadcast program for `axis` (parameter /
+        checkpoint distribution), cache-backed like every other kind and
+        memoized per (axis, root)."""
+        key = (axis, root)
+        if key not in self._broadcast:
+            sched = schedules_for_topology(
+                self.topology(axis), num_chunks=self.num_chunks,
+                cache=self.schedule_cache, kind="broadcast", root=root)
+            self._broadcast[key] = compile_program(sched)
+        return self._broadcast[key]
 
     def allreduce_programs(self, axes: Sequence[str]
                            ) -> Tuple[Tuple[str, PermuteProgram,

@@ -50,6 +50,21 @@ class BucketedAllReduce:
     bucket_bytes: int = 64 << 20
     wire_dtype: Optional[Any] = jnp.bfloat16
 
+    @classmethod
+    def from_schedule(cls, ar: Any, axis_name: str,
+                      bucket_bytes: int = 64 << 20,
+                      wire_dtype: Optional[Any] = jnp.bfloat16
+                      ) -> "BucketedAllReduce":
+        """Build the gradient hook from ONE `AllReduceSchedule` artifact —
+        typically `ScheduleCache.allreduce(...)` or
+        `repro.comms.schedules_for_topology(..., kind="allreduce")`, so the
+        RS and AG halves replay from a single cached `repro.allreduce`
+        entry."""
+        from .executor import compile_program
+        return cls(rs_prog=compile_program(ar.rs),
+                   ag_prog=compile_program(ar.ag), axis_name=axis_name,
+                   bucket_bytes=bucket_bytes, wire_dtype=wire_dtype)
+
     def __call__(self, grads: Any) -> Any:
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         buckets = partition_buckets(grads, self.bucket_bytes)

@@ -170,8 +170,17 @@ def verify_packing(dstar: DiGraph, k: int,
     * every class is a spanning out-tree rooted at its root;
     * per root, multiplicities sum to k;
     * edge-disjoint: per edge, Σ mult of classes using it <= capacity."""
+    verify_rooted_packing(dstar, {u: k for u in sorted(dstar.compute)},
+                          classes)
+
+
+def verify_rooted_packing(dstar: DiGraph, demands: Dict[int, int],
+                          classes: Sequence[TreeClass]) -> None:
+    """Demand-weighted contract of `pack_rooted_trees`: spanning out-trees,
+    per-root multiplicities summing to demands[root], edge-disjointness
+    (used both by allgather, demands ≡ k, and broadcast, {root: λ})."""
     nodes = sorted(dstar.compute)
-    per_root: Dict[int, int] = {u: 0 for u in nodes}
+    per_root: Dict[int, int] = {u: 0 for u in demands}
     load: Dict[Edge, int] = {}
     for c in classes:
         if c.mult <= 0:
@@ -193,8 +202,9 @@ def verify_packing(dstar: DiGraph, k: int,
         for e in c.edges:
             load[e] = load.get(e, 0) + c.mult
     for u, total in per_root.items():
-        if total != k:
-            raise PackingError(f"root {u}: multiplicities sum to {total} != k={k}")
+        if total != demands[u]:
+            raise PackingError(
+                f"root {u}: multiplicities sum to {total} != {demands[u]}")
     for e, used in load.items():
         if used > dstar.cap.get(e, 0):
             raise PackingError(

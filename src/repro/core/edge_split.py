@@ -138,6 +138,86 @@ def max_discard_capacity(d: DiGraph, k: int, u: int, w: int) -> int:
 
 
 # ---------------------------------------------------------------------- #
+# Rooted variant: preserve a demand-weighted tree-packing oracle
+# ---------------------------------------------------------------------- #
+
+def _oracle_holds_demands(d: DiGraph, demands: Dict[int, int]) -> bool:
+    """Frank's rooted-packing condition: with a super-source s tied to each
+    root u by demands[u] parallel arcs, min_v F(s, v; D) >= Σ demands —
+    for broadcast ({root: λ}) this is exactly min_v F(root, v) >= λ."""
+    total = sum(demands.values())
+    for v in sorted(d.compute):
+        net = FlowNetwork(d.num_nodes + 1)
+        s = d.num_nodes
+        for (a, b), c in d.cap.items():
+            net.add_edge(a, b, c)
+        for u, m in sorted(demands.items()):
+            net.add_edge(s, u, m)
+        if net.maxflow(s, v, limit=total) < total:
+            return False
+    return True
+
+
+def _with_split(d: DiGraph, u: int, w: int, t: int, m: int) -> DiGraph:
+    """The graph after replacing m units of (u,w),(w,t) by m of (u,t)
+    (pure discard when u == t)."""
+    trial = dict(d.cap)
+    for e in ((u, w), (w, t)):
+        trial[e] -= m
+        if trial[e] == 0:
+            del trial[e]
+    if u != t:
+        trial[(u, t)] = trial.get((u, t), 0) + m
+    return DiGraph(d.num_nodes, d.compute, trial, d.name)
+
+
+def max_split_capacity_rooted(d: DiGraph, demands: Dict[int, int],
+                              u: int, w: int, t: int) -> int:
+    """Max M such that splitting (u,w),(w,t) by M keeps the rooted oracle.
+
+    Every cut's egress capacity is non-increasing in M under the split, so
+    feasibility is monotone and a binary search on the oracle is exact (the
+    closed form of Theorem 8 only covers the uniform all-roots case)."""
+    bound = min(d.cap.get((u, w), 0), d.cap.get((w, t), 0))
+    if bound == 0:
+        return 0
+
+    def ok(m: int) -> bool:
+        return _oracle_holds_demands(_with_split(d, u, w, t, m), demands)
+
+    if ok(bound):
+        return bound
+    lo_ok, hi = 0, bound
+    while hi - lo_ok > 1:
+        mid = (lo_ok + hi) // 2
+        if ok(mid):
+            lo_ok = mid
+        else:
+            hi = mid
+    return lo_ok
+
+
+def remove_switches_rooted(d: DiGraph, demands: Dict[int, int],
+                           pair_priority: Optional[PairPriority] = None,
+                           verify: bool = False) -> SplitResult:
+    """Algorithm-1 loop with the rooted (broadcast/reduce) oracle: split off
+    all switches while preserving min_v F(s, v) >= Σ demands for the
+    demand-weighted super-source — enough to pack `demands[u]` spanning
+    out-trees at each root u afterwards (Frank).  Eulerian graphs always
+    admit a complete splitting-off, so the greedy loop terminates."""
+    validate_eulerian(d)
+    k = sum(demands.values())
+    return _isolate_switches(
+        d, k,
+        split_cap=lambda dd, u, w, t: max_split_capacity_rooted(
+            dd, demands, u, w, t),
+        discard_cap=lambda dd, t, w: max_split_capacity_rooted(
+            dd, demands, t, w, t),
+        pair_priority=pair_priority, verify=verify,
+        oracle=lambda dd: _oracle_holds_demands(dd, demands))
+
+
+# ---------------------------------------------------------------------- #
 # Algorithm 1
 # ---------------------------------------------------------------------- #
 
@@ -151,6 +231,21 @@ def remove_switches(d: DiGraph, k: int,
     paper uses this hook (§2.2 example) to e.g. prefer cross-cluster pairs.
     """
     validate_eulerian(d)
+    return _isolate_switches(
+        d, k,
+        split_cap=lambda dd, u, w, t: max_split_capacity(dd, k, u, w, t),
+        discard_cap=lambda dd, t, w: max_discard_capacity(dd, k, t, w),
+        pair_priority=pair_priority, verify=verify,
+        oracle=lambda dd: _oracle_holds(dd, k))
+
+
+def _isolate_switches(d: DiGraph, k: int,
+                      split_cap, discard_cap,
+                      pair_priority: Optional[PairPriority],
+                      verify: bool, oracle) -> SplitResult:
+    """Shared Algorithm-1 saturation loop, parameterised by the maximum-
+    splittable-capacity oracles (Theorem-8 closed form for allgather,
+    binary search for the rooted variants)."""
     original = d.copy()
     d = d.copy()
     routing: Dict[Edge, Dict[int, int]] = {}
@@ -187,13 +282,13 @@ def remove_switches(d: DiGraph, k: int,
                 for u in ins:
                     if d.cap.get((w, t), 0) == 0:
                         break
-                    m = max_split_capacity(d, k, u, w, t)
+                    m = split_cap(d, u, w, t)
                     if m > 0:
                         apply_split(u, w, t, m)
                         progress = True
                 # degenerate leftover: (t,w),(w,t) must be discarded
                 if d.cap.get((w, t), 0) > 0 and d.cap.get((t, w), 0) > 0:
-                    m = max_discard_capacity(d, k, t, w)
+                    m = discard_cap(d, t, w)
                     if m > 0:
                         apply_split(t, w, t, m)
                         progress = True
@@ -209,8 +304,8 @@ def remove_switches(d: DiGraph, k: int,
     star = DiGraph(d.num_nodes, d.compute, d.cap, original.name + "*")
     if verify:
         validate_eulerian(star)
-        if not _oracle_holds(star, k):
-            raise EdgeSplitError("edge splitting broke the Theorem-5 oracle")
+        if not oracle(star):
+            raise EdgeSplitError("edge splitting broke the packing oracle")
     return SplitResult(graph=star, routing=routing, original=original, k=k)
 
 

@@ -5,8 +5,12 @@ All bounds are returned as *runtime factors* in units of (data bytes) /
 
   allgather/reduce-scatter:  T >= (M/N) * inv_x_star              (1)
   broadcast:                 T >= M / min-compute-cut             (5)
+  reduce:                    T >= M / min-compute-cut of G^T      (5 dual)
   allreduce:                 T >= M / min-compute-cut             (6)
   allreduce (Patarasuk-Yuan):T >= 2M(N-1)/N / max_v single-node-cut (7)
+
+Per-root variants (`broadcast_root_lb`, `reduce_root_lb`) give the exact
+bound a single-root schedule converges to: M / λ(root).
 """
 from __future__ import annotations
 
@@ -58,6 +62,26 @@ def single_node_cut(g: DiGraph, v: int) -> int:
 def broadcast_lb(g: DiGraph) -> Fraction:
     """Eq (5): runtime factor M * [min cut]^-1 — per unit M."""
     return Fraction(1, min_compute_separating_cut(g))
+
+
+def broadcast_root_lb(g: DiGraph, root: int) -> Fraction:
+    """Eq (5) specialised to one source: T >= M / λ(root) with
+    λ(root) = min_v F(root, v; G) — the exact bound the compiled broadcast
+    schedule converges to as the chunk count grows."""
+    from .schedule import broadcast_lambda
+    return Fraction(1, broadcast_lambda(g, root))
+
+
+def reduce_lb(g: DiGraph) -> Fraction:
+    """Dual of eq (5): reduce is edge-reversed broadcast, so its bound is
+    broadcast's on the transpose graph (equal for Eulerian G)."""
+    return broadcast_lb(g.transpose())
+
+
+def reduce_root_lb(g: DiGraph, root: int) -> Fraction:
+    """Per-root reduce bound: M / min_v F(v, root; G) = broadcast_root_lb on
+    the transpose graph."""
+    return broadcast_root_lb(g.transpose(), root)
 
 
 def allreduce_lb(g: DiGraph) -> Fraction:

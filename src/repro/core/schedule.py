@@ -6,12 +6,17 @@ Chunking implements the paper's §1.3 resolution of the minimality-or-
 saturation dilemma: each of the k trees per root streams P chunks, so the
 runtime converges to the optimum as (P + depth − 1)/P → 1.
 
-Builders:
+Builders (the full collective family the paper's abstract promises):
   compile_allgather      — §2.1-2.3 end-to-end (optimality, split, pack)
   compile_reduce_scatter — allgather on the transpose graph, reversed
                            (paper Appendix B / Zhao et al. [19] App. A)
   compile_allreduce      — RS + AG concatenation (Appendix B)
-  compile_broadcast      — Appendix A (single root, λ(r) trees)
+  compile_broadcast      — Appendix A: λ(r) = min_v F(r, v; G) edge-disjoint
+                           out-trees from one root; switched topologies go
+                           through the rooted edge-splitting variant
+  compile_reduce         — broadcast on the transpose graph, reversed, with
+                           the accumulation (op fusion) happening bottom-up
+                           along each reversed tree
 
 Physical path assignment: every tree-edge unit of capacity is bound to a
 concrete switch path of the original graph G (via the edge-splitting
@@ -25,9 +30,10 @@ from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .arborescence import (TreeClass, max_tree_depth, pack_arborescences,
-                           pack_rooted_trees, verify_packing)
+                           pack_rooted_trees, verify_packing,
+                           verify_rooted_packing)
 from .edge_split import (SplitResult, expand_paths, remove_switches,
-                         trivial_split)
+                         remove_switches_rooted, trivial_split)
 from .graph import DiGraph, Edge
 from .maxflow import build_network
 from .optimality import Optimality, solve_optimality
@@ -46,7 +52,13 @@ class Send:
 
 @dataclasses.dataclass
 class PipelineSchedule:
-    kind: str                      # allgather | reduce_scatter | broadcast
+    """The deployable artifact: a static list of chunk-granular rounds plus
+    everything needed to re-verify it (optimality result, tree classes,
+    edge-splitting routing, physical path assignment).  Serialized by
+    `repro.cache.serialize`; lowered to ppermute programs by
+    `repro.comms.compile_program`."""
+    kind: str                      # allgather | reduce_scatter |
+                                   # broadcast | reduce
     topo: DiGraph                  # original G (possibly with switches)
     dstar: DiGraph                 # logical compute-only graph (caps U*b_e)
     opt: Optimality
@@ -73,6 +85,13 @@ class PipelineSchedule:
     @property
     def k(self) -> int:
         return self.opt.k
+
+    @property
+    def root(self) -> Optional[int]:
+        """The single root of a broadcast/reduce schedule (None otherwise)."""
+        if self.kind in ("broadcast", "reduce"):
+            return self.classes[0].root
+        return None
 
     @property
     def slots_per_shard(self) -> int:
@@ -280,21 +299,22 @@ def compile_allreduce(topo: DiGraph, num_chunks: int = 8,
                       fixed_k: Optional[int] = None,
                       pair_priority=None, verify: bool = False
                       ) -> AllReduceSchedule:
+    """Appendix B: pipelined allreduce as reduce-scatter composed with
+    allgather — one `AllReduceSchedule` carrying both halves, serialized
+    and cached as a single `repro.allreduce` artifact.  Optimal whenever
+    Theorem 19's conditions hold (see `theorem19_rs_ag_optimal`)."""
     rs = compile_reduce_scatter(topo, num_chunks, fixed_k, pair_priority,
                                 verify)
     ag = compile_allgather(topo, num_chunks, fixed_k, pair_priority, verify)
     return AllReduceSchedule(rs=rs, ag=ag)
 
 
-def compile_broadcast(topo: DiGraph, root: int, num_chunks: int = 8
-                      ) -> PipelineSchedule:
-    """Appendix A: pack λ(root) = min_v F(root, v; G) edge-disjoint out-trees
-    from a single root; each streams 1/λ of the data.  (Direct-connect
-    topologies only — switch removal for the broadcast invariant is a
-    different splitting criterion; see DESIGN.md.)"""
-    if any(w in e for e in topo.cap for w in topo.switches):
-        raise NotImplementedError(
-            "broadcast compilation requires a direct-connect topology")
+def broadcast_lambda(topo: DiGraph, root: int) -> int:
+    """λ(root) = min_v F(root, v; G): the exact broadcast bandwidth of the
+    root (paper eq. 5 specialised to one source) — an integer for integer
+    capacities, so no Proposition-3 scaling is needed."""
+    if root not in topo.compute:
+        raise ValueError(f"broadcast root {root} is not a compute node")
     lam = None
     for v in sorted(topo.compute):
         if v == root:
@@ -303,13 +323,57 @@ def compile_broadcast(topo: DiGraph, root: int, num_chunks: int = 8
         lam = f if lam is None else min(lam, f)
     if not lam:
         raise ValueError("root cannot reach some compute node")
-    classes = pack_rooted_trees(topo, {root: lam})
+    return lam
+
+
+def compile_broadcast(topo: DiGraph, root: int, num_chunks: int = 8,
+                      pair_priority=None, verify: bool = False
+                      ) -> PipelineSchedule:
+    """Appendix A: pack λ(root) = min_v F(root, v; G) edge-disjoint out-trees
+    from a single root; each tree streams 1/λ of the data as `num_chunks`
+    pipelined chunks.  Switched topologies first go through the rooted
+    edge-splitting variant, which preserves F(root, v) >= λ for every
+    compute node v (Frank's rooted-packing condition) instead of the
+    all-roots Theorem-5 oracle used by allgather."""
+    lam = broadcast_lambda(topo, root)
+    if topo.switches and any(w in e for e in topo.cap
+                             for w in topo.switches):
+        split = remove_switches_rooted(topo, {root: lam},
+                                       pair_priority=pair_priority,
+                                       verify=verify)
+    else:
+        split = trivial_split(topo, lam)
+    classes = pack_rooted_trees(split.graph, {root: lam})
+    if verify:
+        verify_rooted_packing(split.graph, {root: lam}, classes)
     rounds, offsets = _build_allgather_rounds(classes, num_chunks)
     opt = Optimality(inv_x_star=Fraction(len(topo.compute), lam),
                      U=Fraction(1), k=lam)
-    split = trivial_split(topo, lam)
     paths = _assign_paths(split, classes)
     return PipelineSchedule(
-        kind="broadcast", topo=topo, dstar=topo, opt=opt, classes=classes,
-        split=split, num_chunks=num_chunks, rounds=rounds,
+        kind="broadcast", topo=topo, dstar=split.graph, opt=opt,
+        classes=classes, split=split, num_chunks=num_chunks, rounds=rounds,
         class_slot_offset=offsets, path_assignment=paths)
+
+
+def compile_reduce(topo: DiGraph, root: int, num_chunks: int = 8,
+                   pair_priority=None, verify: bool = False
+                   ) -> PipelineSchedule:
+    """Reduce = broadcast compiled on G^T with all sends reversed (src/dst
+    swapped, round order flipped) — the same duality that derives
+    reduce-scatter from allgather.  In the reversed schedule every node
+    forwards each chunk slot to its tree-parent only after all tree-children
+    delivered theirs, so the reduction op is fused bottom-up along the tree:
+    a node sends one accumulated partial per slot, never raw operands."""
+    bc = compile_broadcast(topo.transpose(), root, num_chunks,
+                           pair_priority=pair_priority, verify=verify)
+    rounds = [
+        [Send(src=s.dst, dst=s.src, root=s.root, slot=s.slot, cls=s.cls)
+         for s in rnd]
+        for rnd in reversed(bc.rounds)]
+    return PipelineSchedule(
+        kind="reduce", topo=topo, dstar=bc.dstar.transpose(),
+        opt=bc.opt, classes=bc.classes, split=bc.split,
+        num_chunks=num_chunks, rounds=rounds,
+        class_slot_offset=bc.class_slot_offset,
+        path_assignment=bc.path_assignment)

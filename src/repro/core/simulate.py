@@ -72,9 +72,11 @@ def _round_times(sched: PipelineSchedule, data_size: Fraction,
                  reverse_paths: bool) -> Tuple[Fraction, Dict[Edge, Fraction]]:
     """Total pipelined runtime + physical per-link byte totals."""
     n = sched.num_nodes
-    chunk = Fraction(data_size, n * sched.slots_per_shard) \
-        if sched.kind != "broadcast" else \
-        Fraction(data_size, sched.slots_per_shard)
+    # rooted collectives move one buffer of M bytes; the gathered/scattered
+    # family moves N shards of M/N bytes each
+    chunk = Fraction(data_size, sched.slots_per_shard) \
+        if sched.kind in ("broadcast", "reduce") else \
+        Fraction(data_size, n * sched.slots_per_shard)
     # reduce-scatter schedules carry paths in transpose-graph orientation;
     # after flipping the hops below they are in original-graph orientation,
     # so the bandwidth table is always sched.topo.cap as-is.
@@ -140,6 +142,9 @@ def verify_allgather_delivery(sched: PipelineSchedule) -> None:
 def simulate_allgather(sched: PipelineSchedule,
                        data_size: Fraction = Fraction(1),
                        verify: bool = True) -> SimReport:
+    """Exact pipelined allgather runtime on the physical topology, after
+    (optionally) replaying every chunk through the delivery verifier; the
+    report's lb_time is the eq (1) bound (M/N)·(1/x*)."""
     if verify:
         verify_allgather_delivery(sched)
     t, link_bytes = _round_times(sched, data_size, reverse_paths=False)
@@ -152,30 +157,91 @@ def simulate_allgather(sched: PipelineSchedule,
 # broadcast
 # ---------------------------------------------------------------------- #
 
+def verify_broadcast_delivery(sched: PipelineSchedule) -> None:
+    """Replay: every node must end with all λ·P chunks of the root's buffer;
+    a chunk may only be forwarded in a strictly later round than received."""
+    root = sched.classes[0].root
+    slots = sched.slots_per_shard
+    have: Dict[int, Set[Tuple[int, int]]] = {
+        v: set() for v in sched.nodes}
+    have[root] = {(root, s) for s in range(slots)}
+    for rnd_i, rnd in enumerate(sched.rounds):
+        inc = []
+        for s in rnd:
+            if (s.root, s.slot) not in have[s.src]:
+                raise ScheduleError(
+                    f"round {rnd_i}: broadcast forwards unheld chunk")
+            inc.append((s.dst, (s.root, s.slot)))
+        for dst, ch in inc:
+            have[dst].add(ch)
+    for v in sched.nodes:
+        if len(have[v]) != slots:
+            raise ScheduleError(f"broadcast: node {v} incomplete")
+
+
 def simulate_broadcast(sched: PipelineSchedule,
                        data_size: Fraction = Fraction(1),
                        verify: bool = True) -> SimReport:
+    """Exact pipelined broadcast runtime; lb_time is the eq (5) per-root
+    bound M/λ(root) (sched.k = λ)."""
     if verify:
-        root = sched.classes[0].root
-        slots = sched.slots_per_shard
-        have: Dict[int, Set[Tuple[int, int]]] = {
-            v: set() for v in sched.nodes}
-        have[root] = {(root, s) for s in range(slots)}
-        for rnd_i, rnd in enumerate(sched.rounds):
-            inc = []
-            for s in rnd:
-                if (s.root, s.slot) not in have[s.src]:
-                    raise ScheduleError(
-                        f"round {rnd_i}: broadcast forwards unheld chunk")
-                inc.append((s.dst, (s.root, s.slot)))
-            for dst, ch in inc:
-                have[dst].add(ch)
-        for v in sched.nodes:
-            if len(have[v]) != slots:
-                raise ScheduleError(f"broadcast: node {v} incomplete")
+        verify_broadcast_delivery(sched)
     t, link_bytes = _round_times(sched, data_size, reverse_paths=False)
     lb = data_size * Fraction(1, sched.k)  # eq (5): M / min-cut, k = λ
     return SimReport("broadcast", len(sched.rounds), t, lb, link_bytes,
+                     sched.num_chunks)
+
+
+# ---------------------------------------------------------------------- #
+# reduce (edge-reversed broadcast with op fusion)
+# ---------------------------------------------------------------------- #
+
+def verify_reduce(sched: PipelineSchedule) -> None:
+    """Replay with contribution counters: every node starts holding its own
+    partial for each of the λ·P chunk slots; partials flow up the reversed
+    trees (accumulating at every hop — op fusion); at the end the root must
+    hold, for every slot, exactly one contribution from every rank."""
+    root = sched.classes[0].root
+    nodes = sched.nodes
+    slots = sched.slots_per_shard
+    state: Dict[int, Dict[int, Counter]] = {
+        v: {s: Counter({v: 1}) for s in range(slots)} for v in nodes}
+    for rnd_i, rnd in enumerate(sched.rounds):
+        moves: List[Tuple[int, int, Counter]] = []
+        for s in rnd:
+            payload = state[s.src].get(s.slot)
+            if payload is None:
+                raise ScheduleError(
+                    f"round {rnd_i}: {s.src} re-sends already-sent slot "
+                    f"{s.slot} (fusion violation: a node forwards each "
+                    f"accumulated partial exactly once)")
+            moves.append((s.dst, s.slot, payload))
+            del state[s.src][s.slot]          # the partial leaves the sender
+        for dst, slot, payload in moves:
+            acc = state[dst].get(slot)
+            if acc is None:
+                state[dst][slot] = Counter(payload)
+            else:
+                acc.update(payload)
+    full = Counter({v: 1 for v in nodes})
+    for s in range(slots):
+        got = state[root].get(s)
+        if got != full:
+            raise ScheduleError(
+                f"reduce root {root} slot {s}: contributions "
+                f"{dict(got or {})} != one from every rank")
+
+
+def simulate_reduce(sched: PipelineSchedule,
+                    data_size: Fraction = Fraction(1),
+                    verify: bool = True) -> SimReport:
+    """Exact pipelined reduce runtime (contribution-counter replay when
+    verify=True); lb_time is the eq (5) dual M / min cut into the root."""
+    if verify:
+        verify_reduce(sched)
+    t, link_bytes = _round_times(sched, data_size, reverse_paths=True)
+    lb = data_size * Fraction(1, sched.k)  # eq (5) dual: M / min cut into root
+    return SimReport("reduce", len(sched.rounds), t, lb, link_bytes,
                      sched.num_chunks)
 
 
@@ -221,6 +287,9 @@ def verify_reduce_scatter(sched: PipelineSchedule) -> None:
 def simulate_reduce_scatter(sched: PipelineSchedule,
                             data_size: Fraction = Fraction(1),
                             verify: bool = True) -> SimReport:
+    """Exact pipelined reduce-scatter runtime (physical paths traversed in
+    reverse of the transpose-graph orientation they were assigned in);
+    lb_time equals allgather's eq (1) bound by Appendix-B duality."""
     if verify:
         verify_reduce_scatter(sched)
     t, link_bytes = _round_times(sched, data_size, reverse_paths=True)
@@ -236,6 +305,9 @@ def simulate_reduce_scatter(sched: PipelineSchedule,
 def simulate_allreduce(ar: AllReduceSchedule,
                        data_size: Fraction = Fraction(1),
                        verify: bool = True) -> SimReport:
+    """Exact runtime of the composed RS+AG allreduce (both halves verified
+    independently); lb_time is the RS+AG optimum 2·(M/N)·(1/x*), which is
+    the true allreduce optimum under the Theorem-19 conditions."""
     rs = simulate_reduce_scatter(ar.rs, data_size, verify)
     ag = simulate_allgather(ar.ag, data_size, verify)
     link_bytes = dict(rs.link_bytes)

@@ -33,6 +33,13 @@ def main() -> int:
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--host-devices", type=int, default=0,
                     help="re-exec with N forced host devices (CPU testing)")
+    ap.add_argument("--collectives", default="xla",
+                    choices=("xla", "pipeline"),
+                    help="xla: stock GSPMD all-reduces.  pipeline: gradients "
+                         "flow through a BucketedAllReduce built from the "
+                         "cached bandwidth-optimal allreduce artifact "
+                         "(shard_map data-parallel driver; requires "
+                         "--model-parallel 1)")
     ap.add_argument("--schedule-cache", default="",
                     help="pre-compile the per-axis tree-pipeline collective "
                          "programs into this on-disk artifact cache (later "
@@ -66,27 +73,32 @@ def main() -> int:
     mesh = Mesh(np.array(devs[:dp * mp]).reshape(dp, mp), ("data", "model"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    if args.schedule_cache:
+    ctx = None
+    if args.schedule_cache or args.collectives == "pipeline":
         # Warm the on-disk artifact cache with this mesh's per-axis
         # tree-pipeline programs: the first launch compiles and persists,
-        # later launches deserialize.  The XLA-collective train step below
-        # does not consume these; the BucketedAllReduce gradient hook and
-        # other pipeline-collectives consumers do (ROADMAP follow-up wires
-        # it through this same cache).
+        # later launches deserialize.  Under --collectives pipeline the
+        # BucketedAllReduce gradient hook below replays the cached
+        # `repro.allreduce` artifact end-to-end.
         from repro.cache import ScheduleCache
         from repro.comms import CollectiveContext
-        cache = ScheduleCache(args.schedule_cache)
+        cache = ScheduleCache(args.schedule_cache) \
+            if args.schedule_cache else None
         ctx = CollectiveContext(dict(zip(mesh.axis_names,
                                          mesh.devices.shape)),
                                 schedule_cache=cache)
         print(ctx.describe())
-        print(cache.describe())
+        if cache is not None:
+            print(cache.describe())
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg, remat=True)
 
     params = model.init(jax.random.PRNGKey(0), jnp.float32)
-    p_spec = param_specs(jax.eval_shape(lambda: params), mesh, fsdp=True)
+    # pipeline collectives run a replicated-params shard_map DP driver, so
+    # FSDP param sharding only applies to the XLA-collectives path
+    p_spec = param_specs(jax.eval_shape(lambda: params), mesh,
+                         fsdp=args.collectives == "xla")
     o_spec = opt_specs(p_spec)
     with mesh:
         params = jax.device_put(params, to_named(p_spec, mesh))
@@ -105,14 +117,50 @@ def main() -> int:
 
     batch0 = make_global_batch(dc, 0, mesh, ("data",))
     b_spec = batch_specs(jax.eval_shape(lambda: batch0), mesh)
-    with mesh:
-        step_jit = jax.jit(
-            make_train_step(model, tc),
-            in_shardings=(to_named(p_spec, mesh), to_named(o_spec, mesh),
-                          to_named(b_spec, mesh)),
-            out_shardings=(to_named(p_spec, mesh), to_named(o_spec, mesh),
-                           None),
-            donate_argnums=(0, 1))
+    if args.collectives == "pipeline":
+        # Gradients cross devices through the paper's tree-pipeline
+        # allreduce: one cached `repro.allreduce` artifact per axis, lowered
+        # to ppermute programs and wrapped as the BucketedAllReduce hook of
+        # make_train_step, executed inside shard_map.
+        if mp != 1:
+            raise SystemExit("--collectives pipeline requires "
+                             "--model-parallel 1")
+        try:
+            from jax import shard_map
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        red = ctx.bucketed_allreduce("data", wire_dtype=None)
+
+        def grad_reduce(tree):
+            return jax.tree.map(lambda x: x / dp, red(tree))
+
+        base_step = make_train_step(model, tc, grad_reduce=grad_reduce)
+
+        def spmd_step(params, opt_state, batch):
+            p, o, m = base_step(params, opt_state, batch)
+            # per-device diagnostics must be replicated for out_specs=P()
+            m = {k: jax.lax.pmean(v, "data") for k, v in m.items()}
+            return p, o, m
+
+        kwargs = dict(mesh=mesh, in_specs=(P(), P(), P("data")),
+                      out_specs=(P(), P(), P()))
+        try:
+            step_sm = shard_map(spmd_step, check_rep=False, **kwargs)
+        except TypeError:       # newer jax: check_rep retired
+            step_sm = shard_map(spmd_step, **kwargs)
+        with mesh:
+            step_jit = jax.jit(step_sm, donate_argnums=(0, 1))
+    else:
+        with mesh:
+            step_jit = jax.jit(
+                make_train_step(model, tc),
+                in_shardings=(to_named(p_spec, mesh), to_named(o_spec, mesh),
+                              to_named(b_spec, mesh)),
+                out_shardings=(to_named(p_spec, mesh), to_named(o_spec, mesh),
+                               None),
+                donate_argnums=(0, 1))
 
     def step_fn(step, state):
         p, o = state

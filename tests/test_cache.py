@@ -7,13 +7,16 @@ from pathlib import Path
 
 import pytest
 
-from repro.cache import (ScheduleCache, SMOKE_NAMES, allreduce_from_json,
-                         allreduce_to_json, compiler_fingerprint, run_sweep,
-                         schedule_from_json, schedule_to_json, sweep_registry)
+from repro.cache import (COLLECTIVES, ScheduleCache, SMOKE_NAMES,
+                         allreduce_from_json, allreduce_to_json,
+                         compiler_fingerprint, run_sweep, schedule_from_json,
+                         schedule_to_json, sweep_registry)
 from repro.cache.serialize import ensure_claimed
 from repro.core import (compile_allgather, compile_allreduce,
+                        compile_broadcast, compile_reduce,
                         compile_reduce_scatter, simulate_allgather,
-                        simulate_allreduce, simulate_reduce_scatter)
+                        simulate_allreduce, simulate_broadcast,
+                        simulate_reduce, simulate_reduce_scatter)
 from repro.core.graph import DiGraph
 from repro.topo import (bcube, bidir_ring, dragonfly, fig1a, hypercube,
                         mesh_of_dgx, ring, two_cluster_switch)
@@ -94,6 +97,24 @@ def test_reduce_scatter_roundtrip_exact():
     back = schedule_from_json(schedule_to_json(sched))
     rep = simulate_reduce_scatter(back)
     assert rep.sim_time == back.claimed_runtime
+
+
+@pytest.mark.parametrize("compiler,simulator", [
+    (compile_broadcast, simulate_broadcast),
+    (compile_reduce, simulate_reduce),
+])
+def test_rooted_roundtrip_exact(compiler, simulator):
+    """Broadcast/reduce artifacts round-trip byte-stably, carry the root,
+    and replay to their claimed runtime — including a switched topology."""
+    for make, root in ((fig1a, 2), (lambda: bidir_ring(6), 0)):
+        sched = compiler(make(), root=root, num_chunks=4)
+        text = schedule_to_json(sched)
+        back = schedule_from_json(text)
+        assert schedule_to_json(back) == text
+        assert back.root == root
+        assert json.loads(text)["root"] == root
+        rep = simulator(back)
+        assert rep.sim_time == back.claimed_runtime
 
 
 # ---------------------------------------------------------------------- #
@@ -183,31 +204,52 @@ def test_executor_consults_cache(tmp_path, monkeypatch):
 # ---------------------------------------------------------------------- #
 
 GOLDENS = [
-    ("fig1a.allgather.p8.json", fig1a, 8),
-    ("bring8.allgather.p8.json", lambda: bidir_ring(8), 8),
+    ("fig1a.allgather.p8.json", fig1a,
+     lambda g: compile_allgather(g, num_chunks=8), simulate_allgather),
+    ("bring8.allgather.p8.json", lambda: bidir_ring(8),
+     lambda g: compile_allgather(g, num_chunks=8), simulate_allgather),
     ("two_cluster_3x6.allgather.p8.json",
-     lambda: two_cluster_switch(3, 6, 2), 8),
+     lambda: two_cluster_switch(3, 6, 2),
+     lambda g: compile_allgather(g, num_chunks=8), simulate_allgather),
+    ("fig1a.broadcast.r0.p8.json", fig1a,
+     lambda g: compile_broadcast(g, root=0, num_chunks=8),
+     simulate_broadcast),
+    ("bring8.reduce.r0.p8.json", lambda: bidir_ring(8),
+     lambda g: compile_reduce(g, root=0, num_chunks=8), simulate_reduce),
 ]
 
 
-@pytest.mark.parametrize("fname,make,p", GOLDENS)
-def test_golden_roundtrip_and_claimed_optimum(fname, make, p):
+@pytest.mark.parametrize("fname,make,compiler,simulator", GOLDENS)
+def test_golden_roundtrip_and_claimed_optimum(fname, make, compiler,
+                                              simulator):
     text = (GOLDEN_DIR / fname).read_text()
     sched = schedule_from_json(text)
     # byte-stable round-trip of the checked-in artifact
     assert schedule_to_json(sched) == text
     # the golden schedule still verifies and hits its claimed exact runtime
-    rep = simulate_allgather(sched)
+    rep = simulator(sched)
     assert rep.sim_time == sched.claimed_runtime
     assert sched.topo.fingerprint() == make().fingerprint()
 
 
-@pytest.mark.parametrize("fname,make,p", GOLDENS)
-def test_golden_matches_current_compiler(fname, make, p):
+@pytest.mark.parametrize("fname,make,compiler,simulator", GOLDENS)
+def test_golden_matches_current_compiler(fname, make, compiler, simulator):
     """Recompiling today must reproduce the checked-in bytes — any compiler
     change that alters emitted schedules has to regenerate the goldens."""
-    sched = compile_allgather(make(), num_chunks=p)
+    sched = compiler(make())
     assert schedule_to_json(sched) == (GOLDEN_DIR / fname).read_text()
+
+
+def test_golden_allreduce_artifact():
+    """The nested `repro.allreduce` golden round-trips and both halves
+    replay to the combined claim."""
+    text = (GOLDEN_DIR / "dragonfly.allreduce.p8.json").read_text()
+    ar = allreduce_from_json(text)
+    assert allreduce_to_json(ar) == text
+    rep = simulate_allreduce(ar)
+    assert rep.sim_time == ar.claimed_runtime
+    assert allreduce_to_json(compile_allreduce(dragonfly(),
+                                               num_chunks=8)) == text
 
 
 # ---------------------------------------------------------------------- #
@@ -226,10 +268,13 @@ def test_sweep_registry_covers_new_families():
 def test_sweep_smoke_emits_bench_json(tmp_path):
     out = tmp_path / "BENCH_schedules.json"
     doc = run_sweep(names=SMOKE_NAMES, jobs=1, out_path=str(out),
-                    cache_dir=str(tmp_path / "cache"))
+                    cache_dir=str(tmp_path / "cache"),
+                    collectives=("allgather", "broadcast", "reduce",
+                                 "allreduce"))
     on_disk = json.loads(out.read_text())
     assert on_disk["format"] == "repro.bench_schedules"
     assert on_disk["num_topologies"] == len(SMOKE_NAMES)
+    assert on_disk["num_entries"] == 4 * len(SMOKE_NAMES)
     for e in doc["entries"]:
         assert e["compile_time_s"] >= 0
         assert e["num_chunks"] >= e["depth"]          # P >= depth enforced
@@ -237,21 +282,115 @@ def test_sweep_smoke_emits_bench_json(tmp_path):
         assert Fraction(e["achieved_runtime"]) == Fraction(e["claimed_runtime"])
         assert Fraction(e["achieved_over_lb"]) >= 1
         assert e["verified"]
+        assert (e["root"] is not None) == (e["kind"] in ("broadcast",
+                                                         "reduce"))
     # second sweep over the same cache dir: pure hit path, same results
     doc2 = run_sweep(names=SMOKE_NAMES, jobs=1,
-                     cache_dir=str(tmp_path / "cache"))
+                     cache_dir=str(tmp_path / "cache"),
+                     collectives=("allgather", "broadcast", "reduce",
+                                  "allreduce"))
     for e1, e2 in zip(doc["entries"], doc2["entries"]):
         assert e1["claimed_runtime"] == e2["claimed_runtime"]
         assert e1["fingerprint"] == e2["fingerprint"]
 
 
 def test_checked_in_bench_is_current():
-    """The committed BENCH_schedules.json was produced by this compiler and
-    every entry reproduced its claimed runtime exactly."""
+    """The committed BENCH_schedules.json was produced by this compiler,
+    covers the full collective family on every zoo topology, and every
+    entry reproduced its claimed runtime exactly."""
     path = Path(__file__).parent.parent / "BENCH_schedules.json"
     doc = json.loads(path.read_text())
     assert doc["compiler"] == compiler_fingerprint()
     assert doc["num_topologies"] == len(sweep_registry())
+    assert list(doc["collectives"]) == list(COLLECTIVES)
+    assert doc["num_entries"] == len(sweep_registry()) * len(COLLECTIVES)
+    seen = {(e["name"], e["kind"]) for e in doc["entries"]}
+    for name in sweep_registry():
+        for kind in ("broadcast", "reduce", "allreduce"):
+            assert (name, kind) in seen
     for e in doc["entries"]:
         assert Fraction(e["achieved_over_claimed"]) == 1
         assert e["num_chunks"] >= e["depth"]
+
+
+def test_cache_lru_eviction(tmp_path):
+    """max_bytes turns on size-capped LRU eviction: recently-used artifacts
+    survive, cold ones are deleted, and the just-written artifact is never
+    evicted even when it alone exceeds the cap."""
+    # measure per-artifact sizes to pick a cap that holds ring4+ring6 but
+    # not all three
+    sizes = {}
+    for n in (4, 5, 6):
+        probe = ScheduleCache(tmp_path / f"probe{n}")
+        probe.allgather(ring(n), num_chunks=4)
+        sizes[n] = probe.size_bytes()
+    cap = sizes[4] + sizes[6] + sizes[5] // 2
+
+    c = ScheduleCache(tmp_path / "lru", max_bytes=cap)
+    c.allgather(ring(4), num_chunks=4)
+    c.allgather(ring(5), num_chunks=4)
+    assert c.stats.evictions == 0
+    import os
+    import time
+    # make mtimes strictly ordered, then touch ring(4) via a fresh cache
+    for p in sorted((tmp_path / "lru").glob("*.json")):
+        os.utime(p, (time.time() - 60, time.time() - 60))
+    hot = ScheduleCache(tmp_path / "lru", max_bytes=cap)
+    hot.allgather(ring(4), num_chunks=4)           # refreshes recency
+    assert hot.stats.hits == 1
+    hot.allgather(ring(6), num_chunks=4)           # push over the cap
+    assert hot.stats.evictions == 1
+    keys = "".join(hot.entries())
+    assert hot.key("allgather", ring(4), 4) in keys      # recently used kept
+    assert hot.key("allgather", ring(5), 4) not in keys  # LRU victim
+    # a fresh cache still replays the survivors
+    assert ScheduleCache(tmp_path / "lru").allgather(
+        ring(4), num_chunks=4).claimed_runtime is not None
+
+
+def test_cache_lru_refresh_on_memory_hit(tmp_path):
+    """In-memory hits must also refresh the on-disk LRU recency, or a hot
+    artifact served from memory becomes the coldest file and gets evicted
+    first."""
+    import os
+    import time
+    c = ScheduleCache(tmp_path, max_bytes=1 << 30)
+    c.allgather(ring(4), num_chunks=4)
+    path = c.path_for(c.key("allgather", ring(4), 4))
+    os.utime(path, (time.time() - 3600, time.time() - 3600))
+    stale = path.stat().st_mtime
+    c.allgather(ring(4), num_chunks=4)               # pure memory hit
+    assert c.stats.hits == 1
+    assert path.stat().st_mtime > stale
+
+
+def test_collective_context_broadcast_program(tmp_path):
+    """CollectiveContext.broadcast_program: cache-backed, memoized per
+    (axis, root), and lowered with the root carried into the program."""
+    from repro.comms import CollectiveContext, PermuteProgram
+    cache = ScheduleCache(tmp_path)
+    ctx = CollectiveContext({"data": 4}, num_chunks=4, schedule_cache=cache)
+    prog = ctx.broadcast_program("data", root=1)
+    assert isinstance(prog, PermuteProgram)
+    assert prog.kind == "broadcast" and prog.root == 1
+    assert prog.axis_size == 4
+    assert ctx.broadcast_program("data", root=1) is prog   # memoized
+    assert ctx.broadcast_program("data", root=0) is not prog
+    # a second context replays the cached artifacts instead of compiling
+    ctx2 = CollectiveContext({"data": 4}, num_chunks=4,
+                             schedule_cache=ScheduleCache(tmp_path))
+    prog2 = ctx2.broadcast_program("data", root=1)
+    assert ctx2.schedule_cache.stats.hits == 1
+    assert [c.perm for rnd in prog2.rounds for c in rnd] == \
+        [c.perm for rnd in prog.rounds for c in rnd]
+
+
+def test_cache_reduce_kind(tmp_path):
+    c = ScheduleCache(tmp_path)
+    red = c.reduce(fig1a(), root=1, num_chunks=4)
+    assert red.kind == "reduce" and red.root == 1
+    c2 = ScheduleCache(tmp_path)
+    again = c2.reduce(fig1a(), root=1, num_chunks=4)
+    assert c2.stats.hits == 1
+    assert again.rounds == red.rounds
+    assert simulate_reduce(again).sim_time == again.claimed_runtime

@@ -61,6 +61,77 @@ def test_tree_collectives_match_references():
     """))
 
 
+def test_tree_broadcast_and_reduce_match_references():
+    print(run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        try:
+            from jax import shard_map
+        except ImportError:  # older jax: experimental namespace
+            from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.topo import bidir_ring, fig1a
+        from repro.core.schedule import compile_broadcast, compile_reduce
+        from repro.comms import compile_program, tree_broadcast, tree_reduce
+
+        mesh = Mesh(np.array(jax.devices()), ('x',))
+        for topo in (bidir_ring(8), fig1a()):   # incl. a switched topology
+            for root in (0, 3):
+                bc = compile_program(compile_broadcast(topo, root=root,
+                                                       num_chunks=4))
+                rd = compile_program(compile_reduce(topo, root=root,
+                                                    num_chunks=4))
+                assert bc.root == root and rd.root == root
+                x = jax.random.normal(jax.random.PRNGKey(root), (8, 13))
+                f = jax.jit(shard_map(
+                    lambda v: tree_broadcast(v[0], bc, 'x')[None],
+                    mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+                got = f(x)
+                assert np.allclose(got, np.broadcast_to(x[root], (8, 13)),
+                                   atol=1e-5), (topo.name, root)
+                g = jax.jit(shard_map(
+                    lambda v: tree_reduce(v[0], rd, 'x')[None],
+                    mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+                # MPI_Reduce semantics: the result is defined on the root
+                assert np.allclose(g(x)[root], x.sum(0), atol=1e-4), \\
+                    (topo.name, root)
+                print('OK bc/red', topo.name, 'root', root)
+    """))
+
+
+def test_bucketed_allreduce_from_cached_artifact():
+    print(run_snippet("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        try:
+            from jax import shard_map
+        except ImportError:  # older jax: experimental namespace
+            from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.topo import bidir_ring
+        from repro.cache import ScheduleCache
+        from repro.comms import (BucketedAllReduce, schedules_for_topology)
+
+        mesh = Mesh(np.array(jax.devices()), ('x',))
+        cache_dir = tempfile.mkdtemp()
+        ar = schedules_for_topology(bidir_ring(8), num_chunks=4,
+                                    cache=ScheduleCache(cache_dir),
+                                    kind='allreduce')
+        # replay the single artifact from a fresh cache (no recompilation)
+        cache = ScheduleCache(cache_dir)
+        ar2 = schedules_for_topology(bidir_ring(8), num_chunks=4,
+                                     cache=cache, kind='allreduce')
+        assert cache.stats.hits == 1 and cache.stats.misses == 0
+        assert ar2.claimed_runtime == ar.claimed_runtime
+        red = BucketedAllReduce.from_schedule(ar2, axis_name='x',
+                                              wire_dtype=None)
+        x = jax.random.normal(jax.random.PRNGKey(9), (8, 40))
+        h = jax.jit(shard_map(lambda v: red({'g': v[0]})['g'][None],
+                              mesh=mesh, in_specs=P('x'), out_specs=P('x')))
+        assert np.allclose(h(x)[0], x.sum(0), atol=1e-4)
+        print('OK bucketed allreduce from one cached artifact')
+    """))
+
+
 def test_multi_axis_hierarchical_allreduce():
     print(run_snippet("""
         import jax, jax.numpy as jnp, numpy as np

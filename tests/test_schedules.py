@@ -6,13 +6,15 @@ from fractions import Fraction
 import numpy as np
 import pytest
 
-from repro.core import (compile_allgather, compile_allreduce,
-                        compile_broadcast, compile_reduce_scatter,
-                        cut_traffic, rs_ag_allreduce_runtime,
+from repro.core import (broadcast_lambda, broadcast_root_lb,
+                        compile_allgather, compile_allreduce,
+                        compile_broadcast, compile_reduce,
+                        compile_reduce_scatter, cut_traffic,
+                        reduce_root_lb, rs_ag_allreduce_runtime,
                         re_bc_allreduce_runtime, simulate_allgather,
                         simulate_allreduce, simulate_broadcast,
-                        simulate_reduce_scatter, solve_optimality,
-                        theorem19_rs_ag_optimal)
+                        simulate_reduce, simulate_reduce_scatter,
+                        solve_optimality, theorem19_rs_ag_optimal)
 from repro.core.graph import DiGraph
 from repro.core.schedule import Send
 from repro.topo import (bcube, bidir_ring, dgx_box, dragonfly, fat_tree,
@@ -112,6 +114,62 @@ def test_broadcast_runtime():
     sched = compile_broadcast(g, root=0, num_chunks=64)
     rep = simulate_broadcast(sched)
     assert rep.ratio < 1.15
+
+
+@pytest.mark.parametrize("make", ZOO)
+def test_broadcast_verified_across_zoo(make):
+    """Appendix A on every zoo family — switched topologies go through the
+    rooted edge-splitting variant; the verifier replays every chunk and the
+    λ(root) bound is met within the pipeline-fill factor."""
+    g = make()
+    root = min(g.compute)
+    sched = compile_broadcast(g, root=root, num_chunks=16, verify=True)
+    assert sched.kind == "broadcast" and sched.root == root
+    assert sched.k == broadcast_lambda(g, root)
+    rep = simulate_broadcast(sched)
+    assert rep.lb_time == broadcast_root_lb(g, root)
+    # ratio bounded by the §1.3 fill factor (P + depth - 1) / P
+    assert rep.ratio <= (16 + sched.depth - 1) / 16 + 1e-9
+
+
+@pytest.mark.parametrize("make", ZOO)
+def test_reduce_verified_across_zoo(make):
+    g = make()
+    root = min(g.compute)
+    sched = compile_reduce(g, root=root, num_chunks=16, verify=True)
+    assert sched.kind == "reduce" and sched.root == root
+    rep = simulate_reduce(sched)           # contribution-counter replay
+    assert rep.lb_time == reduce_root_lb(g, root)
+    assert rep.ratio <= (16 + sched.depth - 1) / 16 + 1e-9
+
+
+@pytest.mark.parametrize("make", ZOO)
+def test_reduce_broadcast_duality(make):
+    """Reduce on G is exactly broadcast on G^T with every send reversed and
+    the round order flipped — the same duality as RS/AG (Appendix B)."""
+    g = make()
+    root = min(g.compute)
+    red = compile_reduce(g, root=root, num_chunks=8)
+    bc = compile_broadcast(g.transpose(), root=root, num_chunks=8)
+    assert red.opt == bc.opt
+    assert red.dstar.cap == bc.dstar.transpose().cap
+    want = [[Send(src=s.dst, dst=s.src, root=s.root, slot=s.slot, cls=s.cls)
+             for s in rnd] for rnd in reversed(bc.rounds)]
+    assert red.rounds == want
+    # the two duals meet the same exact bound (Eulerian symmetry)
+    assert simulate_reduce(red).sim_time == simulate_broadcast(bc).sim_time
+
+
+def test_broadcast_converges_to_mincut_bound():
+    """Eq (5): as P grows the broadcast runtime -> M/λ(root) exactly."""
+    g = fig1a()
+    ratios = [simulate_broadcast(
+        compile_broadcast(g, root=0, num_chunks=p)).ratio
+        for p in (8, 32, 128)]
+    assert all(a >= b for a, b in zip(ratios, ratios[1:]))
+    assert ratios[-1] < 1.05
+    # the bound itself is exact: λ(0) = 4 on fig1a (the 4 NVLink-ish links)
+    assert broadcast_root_lb(g, 0) == Fraction(1, broadcast_lambda(g, 0))
 
 
 def test_fixed_k_schedule_runs():

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Docs-drift checker (run in CI and by tests/test_docs.py).
+
+Three independent checks over the documentation suite:
+
+1. **Links** — every relative markdown link in README.md, docs/*.md,
+   src/repro/cache/README.md and ROADMAP.md resolves to an existing file
+   (anchors stripped; http(s)/mailto links skipped).
+
+2. **CLI flag drift** — the `--flags` documented for `benchmarks/run.py`
+   and `python -m repro.cache.sweep` must match the argparse definitions
+   (`build_parser()` in each).  Both directions are enforced: a documented
+   flag that the parser dropped fails, and a parser flag no doc mentions
+   fails.  Attribution is per paragraph: any `--flag` token in a paragraph
+   that names one of the two CLIs is checked against that CLI's parser.
+
+3. **Module paths** — every `src/repro/...*.py` and `tests/golden/*.json`
+   path named in docs/ALGORITHM.md must exist, and every `(`symbol`, ...)`
+   list following a module path must resolve via getattr on the imported
+   module — the paper-construction table cannot rot silently.
+
+Exit code 0 = clean; non-zero prints every violation.
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO / "benchmarks"))
+
+LINK_DOCS = ["README.md", "ROADMAP.md", "src/repro/cache/README.md"]
+FLAG_DOCS = ["README.md", "src/repro/cache/README.md"]
+FLAG_RE = re.compile(r"(?<![\w-])--[a-z][a-z0-9-]*")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _docs(extra_glob: str = "docs/*.md"):
+    files = [REPO / p for p in LINK_DOCS]
+    files += sorted(REPO.glob(extra_glob))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> list:
+    errors = []
+    for f in _docs():
+        for m in LINK_RE.finditer(f.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = (f.parent / target.split("#")[0]).resolve()
+            if not path.exists():
+                errors.append(f"{f.relative_to(REPO)}: broken link {target}")
+    return errors
+
+
+def _parser_flags(parser) -> set:
+    flags = set()
+    for action in parser._actions:  # noqa: SLF001 — argparse has no API
+        flags.update(s for s in action.option_strings if s.startswith("--"))
+    flags.discard("--help")
+    return flags
+
+
+def check_flags() -> list:
+    import run as bench_run                      # benchmarks/run.py
+    from repro.cache import sweep as sweep_mod
+
+    clis = {
+        "benchmarks/run.py": _parser_flags(bench_run.build_parser()),
+        "repro.cache.sweep": _parser_flags(sweep_mod.build_parser()),
+    }
+    errors = []
+    documented = {name: set() for name in clis}
+    flag_files = [REPO / p for p in FLAG_DOCS] + sorted(REPO.glob("docs/*.md"))
+    for f in flag_files:
+        if not f.exists():
+            continue
+        for para in re.split(r"\n\s*\n", f.read_text()):
+            flags = set(FLAG_RE.findall(para))
+            if not flags:
+                continue
+            for name, actual in clis.items():
+                if name not in para:
+                    continue
+                documented[name] |= flags
+                stale = flags - actual
+                if stale:
+                    errors.append(
+                        f"{f.relative_to(REPO)}: documents "
+                        f"{sorted(stale)} for {name}, not in its argparse "
+                        f"definition")
+    for name, actual in clis.items():
+        missing = actual - documented[name]
+        if missing:
+            errors.append(
+                f"{name}: flags {sorted(missing)} are not documented in "
+                f"any of {FLAG_DOCS + ['docs/*.md']}")
+    return errors
+
+
+def check_module_paths() -> list:
+    errors = []
+    algo = REPO / "docs" / "ALGORITHM.md"
+    text = algo.read_text()
+    for path in set(re.findall(r"(?:src|tests)/[\w./-]+\.(?:py|json)", text)):
+        if not (REPO / path).exists():
+            errors.append(f"docs/ALGORITHM.md: named path {path} missing")
+    # `src/repro/x/y.py` (`sym`, `sym2`) — symbols must resolve
+    for path, syms in re.findall(
+            r"`(src/repro/[\w/]+\.py)`\s*\(([^)]*)`\)", text):
+        mod_name = path[len("src/"):-len(".py")].replace("/", ".")
+        try:
+            mod = importlib.import_module(mod_name)
+        except ImportError as e:
+            errors.append(f"docs/ALGORITHM.md: cannot import {mod_name}: {e}")
+            continue
+        for sym in re.findall(r"`([\w.]+)`", syms + "`"):
+            target = mod
+            ok = True
+            for part in sym.split("."):
+                if not hasattr(target, part):
+                    ok = False
+                    break
+                target = getattr(target, part)
+            if not ok:
+                errors.append(
+                    f"docs/ALGORITHM.md: {mod_name} has no symbol {sym!r}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_flags() + check_module_paths()
+    for e in errors:
+        print(f"DOCS-DRIFT: {e}", file=sys.stderr)
+    if not errors:
+        print("docs check: links, CLI flags, and module paths all consistent")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
