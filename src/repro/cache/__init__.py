@@ -3,10 +3,12 @@
 # compiler-versioned invalidation, and the topology-zoo sweep driver.
 from .fingerprint import (FORMAT_VERSION, compiler_fingerprint,  # noqa: F401
                           graph_fingerprint, schedule_cache_key)
-from .serialize import (SCHEDULE_KINDS, SerializationError,  # noqa: F401
-                        allreduce_from_json, allreduce_to_json,
-                        dumps_canonical, ensure_claimed, schedule_from_json,
-                        schedule_to_json)
+from .serialize import (CACHE_SCHEMA_VERSION, SCHEDULE_KINDS,  # noqa: F401
+                        SerializationError, allreduce_from_json,
+                        allreduce_to_json, attach_stats, dumps_canonical,
+                        ensure_claimed, schedule_from_json, schedule_to_json,
+                        stats_to_payload)
 from .store import CacheStats, ScheduleCache, default_cache_dir  # noqa: F401
-from .sweep import (COLLECTIVES, SMOKE_NAMES, claim_mismatches,  # noqa: F401
-                    default_out_path, run_sweep, sweep_registry)
+from .sweep import (COLLECTIVES, FIXED_K_COLLECTIVES,  # noqa: F401
+                    SMOKE_NAMES, claim_mismatches, default_out_path,
+                    run_sweep, sweep_registry)

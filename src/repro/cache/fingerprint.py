@@ -37,6 +37,7 @@ _COMPILER_MODULES = (
     "repro.core.arborescence",
     "repro.core.fixed_k",
     "repro.core.schedule",
+    "repro.core.plan",
     "repro.core.simulate",
 )
 

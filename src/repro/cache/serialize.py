@@ -28,12 +28,19 @@ from repro.core.arborescence import TreeClass
 from repro.core.edge_split import SplitResult
 from repro.core.graph import DiGraph, Edge
 from repro.core.optimality import Optimality
+from repro.core.plan import CompileStats
 from repro.core.schedule import AllReduceSchedule, PipelineSchedule, Send
 
 from .fingerprint import FORMAT_VERSION
 
 SCHEDULE_FORMAT = "repro.schedule"
 ALLREDUCE_FORMAT = "repro.allreduce"
+STATS_FORMAT = "repro.compile_stats"
+# Version of the *cache directory* schema (artifact payloads stay at
+# FORMAT_VERSION): v3 adds the per-artifact compile-stats sidecar and the
+# flock-guarded index.  v3 readers accept v2 directories (no sidecar → no
+# stats) — the artifact payload format itself is unchanged.
+CACHE_SCHEMA_VERSION = 3
 
 # every kind a `repro.schedule` payload may carry (allreduce artifacts are
 # the nested `repro.allreduce` format: an rs + an ag payload)
@@ -168,6 +175,46 @@ def payload_to_allreduce(d: Dict[str, Any]) -> AllReduceSchedule:
         raise SerializationError(f"not an allreduce payload: {d.get('format')!r}")
     return AllReduceSchedule(rs=payload_to_schedule(d["rs"]),
                              ag=payload_to_schedule(d["ag"]))
+
+
+# ---------------------------------------------------------------------- #
+# compile-stats sidecar (cache schema v3)
+# ---------------------------------------------------------------------- #
+
+def stats_to_payload(art) -> Dict[str, Any]:
+    """The `{key}.stats` sidecar payload for an artifact, or None when the
+    artifact carries no per-stage instrumentation (e.g. it was built by a
+    pre-v3 compiler or deserialized from a v2 cache directory)."""
+    if isinstance(art, AllReduceSchedule):
+        rs, ag = art.rs.compile_stats, art.ag.compile_stats
+        if rs is None and ag is None:
+            return None
+        return {"format": STATS_FORMAT, "version": CACHE_SCHEMA_VERSION,
+                "kind": "allreduce",
+                "rs": rs.to_dict() if rs else None,
+                "ag": ag.to_dict() if ag else None}
+    if art.compile_stats is None:
+        return None
+    return {"format": STATS_FORMAT, "version": CACHE_SCHEMA_VERSION,
+            "kind": art.kind, "stats": art.compile_stats.to_dict()}
+
+
+def attach_stats(art, payload: Dict[str, Any]) -> None:
+    """Re-attach a stats sidecar payload to a deserialized artifact (a
+    malformed sidecar is ignored — stats are diagnostics, never needed for
+    correctness)."""
+    try:
+        if payload.get("format") != STATS_FORMAT:
+            return
+        if isinstance(art, AllReduceSchedule):
+            if payload.get("rs"):
+                art.rs.compile_stats = CompileStats.from_dict(payload["rs"])
+            if payload.get("ag"):
+                art.ag.compile_stats = CompileStats.from_dict(payload["ag"])
+        elif payload.get("stats"):
+            art.compile_stats = CompileStats.from_dict(payload["stats"])
+    except (KeyError, TypeError, ValueError):
+        return
 
 
 # ---------------------------------------------------------------------- #

@@ -13,25 +13,45 @@ atomically (tmp + rename), return.
 
 An in-memory layer sits above the disk so repeated lookups inside one
 process don't even touch the filesystem.
+
+Cache schema v3 (artifact payloads stay at the v2 format):
+
+* each artifact gets a ``{key}.stats`` sidecar with the compiler's
+  per-stage `CompileStats` (loaded back onto hits);
+* all mutations (store, evict, prune, clear) run under an ``flock`` on
+  ``.lock`` and maintain an advisory ``.index`` JSON of resident entries,
+  so concurrent writer processes never interleave an eviction scan with a
+  write or corrupt the index.  Reads stay lock-free (renames are atomic).
+  Directories written by a v2 cache load fine — no sidecar means no stats.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import json
 import os
 import tempfile
 from fractions import Fraction
 from pathlib import Path
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Sequence, Union
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover — non-POSIX fallback, advisory only
+    fcntl = None
 
 from repro.core import schedule as schedule_mod
 from repro.core.graph import DiGraph
 from repro.core.schedule import AllReduceSchedule, PipelineSchedule
 
 from .fingerprint import compiler_fingerprint, schedule_cache_key
-from .serialize import (allreduce_from_json, allreduce_to_json,
-                        schedule_from_json, schedule_to_json)
+from .serialize import (CACHE_SCHEMA_VERSION, allreduce_from_json,
+                        allreduce_to_json, attach_stats, schedule_from_json,
+                        schedule_to_json, stats_to_payload)
 
 Artifact = Union[PipelineSchedule, AllReduceSchedule]
+
+INDEX_FORMAT = "repro.schedule_cache_index"
 
 
 def default_cache_dir() -> str:
@@ -89,6 +109,86 @@ class ScheduleCache:
     def path_for(self, key: str) -> Path:
         return self.root / f"{key}.json"
 
+    def stats_path_for(self, key: str) -> Path:
+        """The compile-stats sidecar (no .json suffix, so artifact globs
+        and the LRU size accounting never see it)."""
+        return self.root / f"{key}.stats"
+
+    # ------------------------------------------------------------------ #
+    # cross-process serialization: flock + advisory index
+    # ------------------------------------------------------------------ #
+
+    @contextlib.contextmanager
+    def _locked(self):
+        """Exclusive flock over the cache directory's mutations.  Advisory:
+        readers never take it (atomic renames keep reads torn-write-free),
+        and on platforms without fcntl it degrades to a no-op."""
+        if fcntl is None:
+            yield
+            return
+        with open(self.root / ".lock", "a+") as fh:
+            fcntl.flock(fh, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(fh, fcntl.LOCK_UN)
+
+    def _index_path(self) -> Path:
+        return self.root / ".index"
+
+    def _read_index(self) -> Dict[str, Dict]:
+        """The advisory entry index ({key: {bytes, kind}}).  Never trusted
+        for correctness — a missing or corrupt index is just rebuilt."""
+        try:
+            doc = json.loads(self._index_path().read_text())
+            if doc.get("format") == INDEX_FORMAT:
+                return dict(doc.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        return {}
+
+    def _write_index(self, entries: Dict[str, Dict]) -> None:
+        doc = {"format": INDEX_FORMAT, "version": CACHE_SCHEMA_VERSION,
+               "compiler": self.compiler_fp, "entries": entries}
+        self._atomic_write(self._index_path(), json.dumps(doc, sort_keys=True))
+
+    def _index_update(self, add: Optional[Dict[str, Dict]] = None,
+                      drop: Sequence[str] = ()) -> None:
+        entries = self._read_index()
+        for key in drop:
+            entries.pop(key, None)
+        for key, info in (add or {}).items():
+            entries[key] = info
+        self._write_index(entries)
+
+    def index(self) -> Dict[str, Dict]:
+        """Advisory {key: {bytes, kind}} of resident artifacts, maintained
+        under the flock by every writer."""
+        return self._read_index()
+
+    def rebuild_index(self) -> Dict[str, Dict]:
+        """Reconstruct the index from the directory contents (run under the
+        lock so a concurrent writer can't interleave)."""
+        with self._locked():
+            entries = {}
+            for p in self.root.glob("*.json"):
+                try:
+                    entries[p.stem] = {"bytes": p.stat().st_size,
+                                       "kind": p.stem.split("-", 1)[0]}
+                except OSError:
+                    continue
+            self._write_index(entries)
+            return entries
+
+    def _unlink_entry(self, key: str) -> None:
+        """Delete an artifact and its stats sidecar (lock held by caller
+        when racing writers matter)."""
+        for path in (self.path_for(key), self.stats_path_for(key)):
+            try:
+                path.unlink()
+            except OSError:
+                pass
+
     def _load(self, key: str, allreduce: bool) -> Optional[Artifact]:
         if key in self._memory:
             self.stats.hits += 1
@@ -108,12 +208,17 @@ class ScheduleCache:
             import warnings
             warnings.warn(f"discarding unreadable schedule artifact "
                           f"{path.name}: {e}")
-            try:
-                path.unlink()
-            except OSError:
-                pass
+            with self._locked():
+                self._unlink_entry(key)
+                self._index_update(drop=[key])
             self.stats.misses += 1
             return None
+        stats_path = self.stats_path_for(key)
+        if stats_path.exists():
+            try:
+                attach_stats(art, json.loads(stats_path.read_text()))
+            except (OSError, ValueError):
+                pass                  # sidecar is diagnostics only
         self._touch(key)              # LRU recency = file mtime
         self._memory[key] = art
         self.stats.hits += 1
@@ -130,7 +235,23 @@ class ScheduleCache:
     def _store(self, key: str, art: Artifact) -> None:
         text = (allreduce_to_json(art) if isinstance(art, AllReduceSchedule)
                 else schedule_to_json(art))
+        stats_payload = stats_to_payload(art)
         path = self.path_for(key)
+        with self._locked():
+            self._atomic_write(path, text)
+            if stats_payload is not None:
+                self._atomic_write(self.stats_path_for(key),
+                                   json.dumps(stats_payload, sort_keys=True)
+                                   + "\n")
+            kind = ("allreduce" if isinstance(art, AllReduceSchedule)
+                    else art.kind)
+            self._index_update(add={key: {"bytes": len(text), "kind": kind}})
+            if self.max_bytes is not None:
+                self._evict_lru(keep=path)
+        self._memory[key] = art
+        self.stats.puts += 1
+
+    def _atomic_write(self, path: Path, text: str) -> None:
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
@@ -140,10 +261,6 @@ class ScheduleCache:
             if os.path.exists(tmp):
                 os.unlink(tmp)
             raise
-        self._memory[key] = art
-        self.stats.puts += 1
-        if self.max_bytes is not None:
-            self._evict_lru(keep=path)
 
     def size_bytes(self) -> int:
         """Total bytes of artifacts currently on disk (concurrent deletions
@@ -157,8 +274,9 @@ class ScheduleCache:
         return total
 
     def _evict_lru(self, keep: Path) -> int:
-        """Delete least-recently-used artifacts until the directory fits
-        `max_bytes`.  `keep` (the artifact just written) is exempt."""
+        """Delete least-recently-used artifacts (and their stats sidecars)
+        until the directory fits `max_bytes`.  `keep` (the artifact just
+        written) is exempt.  Caller holds the flock."""
         files = []
         for p in self.root.glob("*.json"):
             try:
@@ -168,6 +286,7 @@ class ScheduleCache:
             files.append((st.st_mtime, st.st_size, p))
         total = sum(sz for _, sz, _ in files)
         removed = 0
+        dropped: List[str] = []
         for _, sz, p in sorted(files):
             if total <= self.max_bytes:
                 break
@@ -177,10 +296,17 @@ class ScheduleCache:
                 p.unlink()
             except OSError:
                 continue
+            try:
+                self.stats_path_for(p.stem).unlink()
+            except OSError:
+                pass
             self._memory.pop(p.stem, None)
+            dropped.append(p.stem)
             total -= sz
             removed += 1
             self.stats.evictions += 1
+        if dropped:
+            self._index_update(drop=dropped)
         return removed
 
     # ------------------------------------------------------------------ #
@@ -247,6 +373,37 @@ class ScheduleCache:
         self._store(key, sched)
         return sched
 
+    def family(self, topo: DiGraph, kinds: Sequence[str],
+               num_chunks: int = 8, fixed_k: Optional[int] = None,
+               root: Optional[int] = None) -> Dict[str, Artifact]:
+        """Cached `plan.compile_family`: load every hit, then compile all
+        remaining kinds **together** so the misses share solve/split/pack
+        products instead of compiling independently.  Keys are identical to
+        the per-kind methods', so family- and per-kind lookups share
+        entries.  Rooted kinds need `root`; `fixed_k` applies to the
+        allgather family only."""
+        out: Dict[str, Artifact] = {}
+        missing: List[tuple] = []
+        for kind in kinds:
+            rooted = kind in ("broadcast", "reduce")
+            key = self.key(kind, topo, num_chunks,
+                           fixed_k=None if rooted else fixed_k,
+                           root=root if rooted else None)
+            hit = self._load(key, allreduce=kind == "allreduce")
+            if hit is not None:
+                out[kind] = hit
+            else:
+                missing.append((kind, key))
+        if missing:
+            from repro.core import plan as plan_mod
+            compiled = plan_mod.compile_family(
+                topo, kinds=[k for k, _ in missing], num_chunks=num_chunks,
+                root=root, fixed_k=fixed_k, verify=self.verify_on_compile)
+            for kind, key in missing:
+                self._store(key, compiled[kind])
+                out[kind] = compiled[kind]
+        return out
+
     # ------------------------------------------------------------------ #
     # maintenance
     # ------------------------------------------------------------------ #
@@ -257,15 +414,26 @@ class ScheduleCache:
     def prune_stale(self) -> int:
         """Delete artifacts written by a different compiler fingerprint."""
         removed = 0
-        for p in self.root.glob("*.json"):
-            if not p.stem.endswith(self.compiler_fp):
-                p.unlink()
-                removed += 1
+        with self._locked():
+            dropped = []
+            for p in self.root.glob("*.json"):
+                if not p.stem.endswith(self.compiler_fp):
+                    self._unlink_entry(p.stem)
+                    dropped.append(p.stem)
+                    removed += 1
+            if dropped:
+                self._index_update(drop=dropped)
         return removed
 
     def clear(self) -> None:
-        for p in self.root.glob("*.json"):
-            p.unlink()
+        with self._locked():
+            for p in list(self.root.glob("*.json")) + \
+                    list(self.root.glob("*.stats")):
+                try:
+                    p.unlink()
+                except OSError:
+                    pass
+            self._write_index({})
         self._memory.clear()
 
     def describe(self) -> str:

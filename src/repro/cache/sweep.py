@@ -18,6 +18,15 @@ Collectives swept (``--collectives`` selects a subset):
   allreduce                  — Appendix B RS+AG composition, cached as one
                                artifact
 
+Every v3 row carries the staged compiler's per-stage wall times
+(``compile_stats``: solve/split/pack/rounds seconds) alongside the total
+``compile_time_s``, so perf work can see *which* stage moved.
+
+``--fixed-k K`` sweeps the §2.4 fixed-tree-count variant over the zoo
+(allgather family only — rooted kinds always use k = λ(root)); topologies
+where the floor-scaled graph can't be compiled for that k are reported in
+the document's ``skipped`` list rather than failing the sweep.
+
 Runs (topology, collective) pairs in parallel with `concurrent.futures`;
 pass a cache dir to make repeated sweeps (and any launch that follows) skip
 compilation.
@@ -47,10 +56,12 @@ from repro.topo import (bcube, bidir_ring, degrade_link, dgx_box, dragonfly,
 from .fingerprint import compiler_fingerprint
 
 BENCH_FORMAT = "repro.bench_schedules"
-BENCH_VERSION = 2
+BENCH_VERSION = 3
 SMOKE_NAMES = ("ring8", "hypercube3", "fig1a")
 COLLECTIVES = ("allgather", "reduce_scatter", "broadcast", "reduce",
                "allreduce")
+# kinds a --fixed-k sweep exercises (rooted kinds always use k = λ(root))
+FIXED_K_COLLECTIVES = ("allgather", "reduce_scatter", "allreduce")
 
 
 def default_out_path(partial: bool) -> str:
@@ -95,17 +106,19 @@ def sweep_registry() -> Dict[str, Callable[[], DiGraph]]:
 
 
 def _compile(kind: str, g: DiGraph, num_chunks: int,
-             cache_dir: Optional[str], root: Optional[int]):
+             cache_dir: Optional[str], root: Optional[int],
+             fixed_k: Optional[int] = None):
     if cache_dir:
         from .store import ScheduleCache
         cache = ScheduleCache(cache_dir)
         if kind in ("broadcast", "reduce"):
             return getattr(cache, kind)(g, root=root, num_chunks=num_chunks)
-        return getattr(cache, kind)(g, num_chunks=num_chunks)
+        return getattr(cache, kind)(g, num_chunks=num_chunks, fixed_k=fixed_k)
     if kind in ("broadcast", "reduce"):
         return getattr(schedule_mod, f"compile_{kind}")(
             g, root=root, num_chunks=num_chunks)
-    return getattr(schedule_mod, f"compile_{kind}")(g, num_chunks=num_chunks)
+    return getattr(schedule_mod, f"compile_{kind}")(g, num_chunks=num_chunks,
+                                                    fixed_k=fixed_k)
 
 
 _SIMULATORS = {
@@ -123,17 +136,33 @@ def _depth(sched) -> int:
     return sched.depth
 
 
+def _stage_seconds(sched) -> Optional[Dict[str, float]]:
+    """Per-stage compiler wall times of an artifact (allreduce sums its two
+    halves); None when the artifact carries no instrumentation."""
+    halves = (sched.rs, sched.ag) \
+        if isinstance(sched, schedule_mod.AllReduceSchedule) else (sched,)
+    out: Dict[str, float] = {}
+    for half in halves:
+        cs = half.compile_stats
+        if cs is None:
+            continue
+        for stage, secs in cs.stage_seconds().items():
+            out[stage] = round(out.get(stage, 0.0) + secs, 6)
+    return out or None
+
+
 def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
-              cache_dir: Optional[str] = None) -> Dict[str, Any]:
+              cache_dir: Optional[str] = None,
+              fixed_k: Optional[int] = None) -> Dict[str, Any]:
     """Compile one (topology, collective) pair (P >= depth enforced), verify
     chunk-by-chunk, simulate, and return a scoreboard entry."""
     g = sweep_registry()[name]()
     root = min(g.compute) if kind in ("broadcast", "reduce") else None
 
     t0 = time.perf_counter()
-    sched = _compile(kind, g, num_chunks, cache_dir, root)
+    sched = _compile(kind, g, num_chunks, cache_dir, root, fixed_k)
     if _depth(sched) > num_chunks:     # acceptance requires P >= tree depth
-        sched = _compile(kind, g, _depth(sched), cache_dir, root)
+        sched = _compile(kind, g, _depth(sched), cache_dir, root, fixed_k)
     compile_time = time.perf_counter() - t0
 
     rep = _SIMULATORS[kind](sched, verify=True)   # replays every chunk
@@ -157,6 +186,7 @@ def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
         "name": name,
         "kind": kind,
         "root": root,
+        "fixed_k": fixed_k,
         "topology": g.name,
         "fingerprint": g.fingerprint(),
         "num_nodes": g.num_nodes,
@@ -165,6 +195,7 @@ def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
         "num_edges": len(g.cap),
         "num_chunks": num_p,
         "compile_time_s": round(compile_time, 6),
+        "compile_stats": _stage_seconds(sched),
         "inv_x_star": str(opt.inv_x_star),
         "U": str(opt.U),
         "k": opt.k,
@@ -181,38 +212,74 @@ def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
     }
 
 
+def _sweep_pair(name: str, kind: str, num_chunks: int,
+                cache_dir: Optional[str],
+                fixed_k: Optional[int]) -> Dict[str, Any]:
+    """One sweep entry; under --fixed-k, topologies that can't compile for
+    the requested k (e.g. the floor-scaled graph loses the Eulerian
+    condition) become a `skipped` record instead of killing the sweep.
+    Only the known infeasibility errors are tolerated — a PackingError or
+    a verification failure is a compiler bug and still fails the run."""
+    from repro.core.edge_split import EdgeSplitError
+    try:
+        return sweep_one(name, kind, num_chunks, cache_dir, fixed_k)
+    except (EdgeSplitError, ValueError) as e:
+        if fixed_k is None:
+            raise
+        return {"name": name, "kind": kind, "fixed_k": fixed_k,
+                "skipped": f"{type(e).__name__}: {e}"}
+
+
 def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
               jobs: Optional[int] = None, cache_dir: Optional[str] = None,
               out_path: Optional[str] = None,
-              collectives: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+              collectives: Optional[Sequence[str]] = None,
+              fixed_k: Optional[int] = None) -> Dict[str, Any]:
     names = list(names if names is not None else sweep_registry())
     unknown = [n for n in names if n not in sweep_registry()]
     if unknown:
         raise KeyError(f"unknown sweep topologies: {unknown}")
-    collectives = list(collectives if collectives is not None else COLLECTIVES)
+    if collectives is None:
+        collectives = list(FIXED_K_COLLECTIVES if fixed_k is not None
+                           else COLLECTIVES)
+    else:
+        collectives = list(collectives)
     bad_kinds = [c for c in collectives if c not in COLLECTIVES]
     if bad_kinds:
         raise KeyError(f"unknown collectives: {bad_kinds}")
+    if fixed_k is not None:
+        rooted = [c for c in collectives if c not in FIXED_K_COLLECTIVES]
+        if rooted:
+            raise KeyError(f"--fixed-k does not apply to rooted kinds "
+                           f"{rooted} (k = λ(root) there)")
     pairs = [(n, c) for n in names for c in collectives]
     jobs = jobs if jobs is not None else min(len(pairs),
                                              max(1, (os.cpu_count() or 2)))
     if jobs <= 1 or len(pairs) <= 1:
-        entries = [sweep_one(n, c, num_chunks, cache_dir) for n, c in pairs]
+        results = [_sweep_pair(n, c, num_chunks, cache_dir, fixed_k)
+                   for n, c in pairs]
     else:
         with concurrent.futures.ProcessPoolExecutor(max_workers=jobs) as ex:
-            futs = {ex.submit(sweep_one, n, c, num_chunks, cache_dir): (n, c)
+            futs = {ex.submit(_sweep_pair, n, c, num_chunks, cache_dir,
+                              fixed_k): (n, c)
                     for n, c in pairs}
-            entries = [f.result() for f in futs]
-    entries.sort(key=lambda e: (e["name"], COLLECTIVES.index(e["kind"])))
+            results = [f.result() for f in futs]
+    entries = [e for e in results if "skipped" not in e]
+    skipped = [e for e in results if "skipped" in e]
+    order = lambda e: (e["name"], COLLECTIVES.index(e["kind"]))  # noqa: E731
+    entries.sort(key=order)
+    skipped.sort(key=order)
     doc = {
         "format": BENCH_FORMAT,
         "version": BENCH_VERSION,
         "compiler": compiler_fingerprint(),
         "num_chunks": num_chunks,
         "collectives": collectives,
+        "fixed_k": fixed_k,
         "num_topologies": len(names),
         "num_entries": len(entries),
         "entries": entries,
+        "skipped": skipped,
     }
     if out_path:
         with open(out_path, "w") as f:
@@ -233,6 +300,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="collective kinds to sweep (default: all of "
                          f"{COLLECTIVES})")
     ap.add_argument("--chunks", type=int, default=16)
+    ap.add_argument("--fixed-k", type=int, default=None,
+                    help="sweep the §2.4 fixed-tree-count variant "
+                         f"(solve_fixed_k) with this k over {FIXED_K_COLLECTIVES}; "
+                         "incompatible topologies land in the doc's "
+                         "'skipped' list")
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--cache-dir", default=None)
     ap.add_argument("--out", default=None,
@@ -247,23 +319,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = build_parser().parse_args(argv)
     names = list(SMOKE_NAMES) if args.smoke else args.names
     if args.out is None:
-        args.out = default_out_path(partial=names is not None)
+        args.out = default_out_path(
+            partial=names is not None or args.fixed_k is not None)
     doc = run_sweep(names=names, num_chunks=args.chunks, jobs=args.jobs,
                     cache_dir=args.cache_dir, out_path=args.out,
-                    collectives=args.collectives)
+                    collectives=args.collectives, fixed_k=args.fixed_k)
     for e in doc["entries"]:
         print(f"{e['name']}.{e['kind']},{e['compile_time_s'] * 1e6:.1f},"
               f"inv_x*={e['inv_x_star']};k={e['k']};depth={e['depth']};"
               f"claimed={e['claimed_runtime']};"
               f"achieved/claimed={e['achieved_over_claimed']};"
               f"achieved/lb={e['achieved_over_lb_float']:.4f}", flush=True)
+    for e in doc["skipped"]:
+        print(f"{e['name']}.{e['kind']},skipped,{e['skipped']}", flush=True)
     bad = claim_mismatches(doc)
     if bad:
         print(f"FAIL: achieved != claimed for {bad}", file=sys.stderr)
         return 1
     print(f"wrote {args.out}: {doc['num_topologies']} topologies x "
           f"{len(doc['collectives'])} collectives = {doc['num_entries']} "
-          f"entries, compiler {doc['compiler']}")
+          f"entries ({len(doc['skipped'])} skipped), "
+          f"compiler {doc['compiler']}")
     return 0
 
 

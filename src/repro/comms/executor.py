@@ -23,6 +23,7 @@ scatter the (zero) ppermute result there.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -65,7 +66,12 @@ def _slot_of(send: Send, slots_per_shard: int) -> int:
 
 def compile_program(sched: PipelineSchedule) -> PermuteProgram:
     """Lower a pipeline schedule to ppermute calls (device ids = compute
-    node ids, which the topology constructors number 0..A-1)."""
+    node ids, which the topology constructors number 0..A-1).
+
+    This is stage 5 ("lower") of the staged compiler pipeline: its wall
+    time is recorded into the schedule's `compile_stats` (replacing any
+    earlier lower record, so repeated lowering stays idempotent)."""
+    t0 = time.perf_counter()
     a = sched.num_nodes
     s = sched.slots_per_shard
     if sorted(sched.dstar.compute) != list(range(a)):
@@ -116,9 +122,15 @@ def compile_program(sched: PipelineSchedule) -> PermuteProgram:
             calls.append(PermuteCall(perm=perm, send_slots=send_slots,
                                      recv_slots=recv_slots, width=w))
         rounds.append(tuple(calls))
-    return PermuteProgram(kind=sched.kind, axis_size=a,
+    prog = PermuteProgram(kind=sched.kind, axis_size=a,
                           num_slots=a * s, slots_per_shard=s,
                           rounds=tuple(rounds), root=sched.root)
+    stats = getattr(sched, "compile_stats", None)
+    if stats is not None:
+        sched.compile_stats = stats.with_stage(
+            "lower", time.perf_counter() - t0,
+            calls=prog.num_calls, rounds=len(prog.rounds))
+    return prog
 
 
 # ---------------------------------------------------------------------- #

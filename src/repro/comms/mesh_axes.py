@@ -50,6 +50,7 @@ class CollectiveContext:
         self._cache: Dict[str, AxisSchedules] = {}
         self._allreduce: Dict[str, object] = {}
         self._broadcast: Dict[Tuple[str, int], PermuteProgram] = {}
+        self._broadcast_scheds: Dict[Tuple[str, int], PipelineSchedule] = {}
 
     def topology(self, axis: str) -> DiGraph:
         if axis not in self._topologies:
@@ -101,6 +102,7 @@ class CollectiveContext:
             sched = schedules_for_topology(
                 self.topology(axis), num_chunks=self.num_chunks,
                 cache=self.schedule_cache, kind="broadcast", root=root)
+            self._broadcast_scheds[key] = sched
             self._broadcast[key] = compile_program(sched)
         return self._broadcast[key]
 
@@ -114,6 +116,29 @@ class CollectiveContext:
                        key=lambda a: -self.mesh_axes[a])
         return tuple((a, self.axis(a).rs_prog, self.axis(a).ag_prog)
                      for a in order)
+
+    def compile_stats_report(self) -> str:
+        """Per-stage schedule-compiler wall times for every artifact this
+        context has acquired so far (cache hits report the stage times of
+        the original compilation, replayed from the stats sidecar)."""
+        lines = ["schedule compile stages (solve|split|pack|rounds|lower):"]
+
+        def add(tag: str, sched) -> None:
+            cs = getattr(sched, "compile_stats", None)
+            if cs is not None:
+                lines.append(f"  {tag}: {cs.describe()}")
+
+        for a, ax in self._cache.items():
+            add(f"{a}", ax.ag_sched)
+            add(f"{a}", ax.rs_sched)
+        for a, ar in self._allreduce.items():
+            add(f"{a}.allreduce", ar.rs)
+            add(f"{a}.allreduce", ar.ag)
+        for (a, root), sched in self._broadcast_scheds.items():
+            add(f"{a}.r{root}", sched)
+        if len(lines) == 1:
+            return "schedule compile stages: (nothing compiled yet)"
+        return "\n".join(lines)
 
     def describe(self) -> str:
         lines = [f"CollectiveContext P={self.num_chunks}"]

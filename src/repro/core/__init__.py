@@ -26,6 +26,8 @@ from .schedule import (AllReduceSchedule, PipelineSchedule, Send,  # noqa: F401
                        broadcast_lambda, compile_allgather, compile_allreduce,
                        compile_broadcast, compile_reduce,
                        compile_reduce_scatter)
+from .plan import (CollectivePlan, CompileStats, PlanError,  # noqa: F401
+                   StageStat, compile_family, compile_plan, plan_for)
 from .simulate import (ScheduleError, SimReport, cut_traffic,  # noqa: F401
                        simulate_allgather, simulate_allreduce,
                        simulate_broadcast, simulate_reduce,

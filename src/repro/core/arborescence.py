@@ -103,11 +103,17 @@ def pack_rooted_trees(dstar: DiGraph,
             picked = False
             # candidate edges: BFS-like order (oldest tail vertex first)
             for x in cur.verts:
+                # one Theorem-12 gadget network serves every sink y probed
+                # from this x (g and the class set only change on a pick,
+                # which restarts the scan)
+                gadget = None
                 for y in sorted(dstar.compute):
                     e = (x, y)
                     if y in cur.vset or g.get(e, 0) <= 0:
                         continue
-                    mu = _mu(dstar, g, classes, ci, e)
+                    if gadget is None:
+                        gadget = _MuGadget(dstar, g, classes, ci, x)
+                    mu = gadget.mu(y)
                     if mu <= 0:
                         continue
                     if mu < cur.mult:
@@ -135,29 +141,43 @@ def pack_rooted_trees(dstar: DiGraph,
     return classes
 
 
-def _mu(dstar: DiGraph, g: Dict[Edge, int], classes: Sequence[TreeClass],
-        ci: int, e: Edge) -> int:
-    """Theorem 12: µ for adding edge e=(x,y) to classes[ci]."""
-    x, y = e
-    cur = classes[ci]
-    want = min(g[e], cur.mult)
-    # gadget: one node s_i per other *incomplete* class
-    others = [c for j, c in enumerate(classes)
-              if j != ci and c.mult > 0 and len(c.vset) < dstar.num_compute]
-    sum_m = sum(c.mult for c in others)
-    inf = sum_m + sum(g.values()) + want + 1
-    net = FlowNetwork(dstar.num_nodes + len(others))
-    for (a, b), c in g.items():
-        if c > 0:
-            net.add_edge(a, b, c)
-    for j, c in enumerate(others):
-        sid = dstar.num_nodes + j
-        net.add_edge(x, sid, c.mult)
-        for v in c.verts:
-            net.add_edge(sid, v, inf)
-    limit = sum_m + want
-    f = net.maxflow(x, y, limit=limit)
-    return min(want, f - sum_m)
+class _MuGadget:
+    """Theorem 12's auxiliary network D̄ for one tail vertex x, reused
+    across every candidate head y (reset_flow between sinks): µ for adding
+    edge (x,y) to classes[ci] is min{g(x,y), m(R1), F(x,y; D̄) − Σ m(R_i)}.
+
+    The ∞ stand-in only needs to exceed the flow limit Σm + m(R1), so it
+    is sized once per gadget (not per candidate edge) — the computed µ is
+    identical for any sufficiently large value."""
+
+    __slots__ = ("net", "g", "cur", "x", "sum_m", "_used")
+
+    def __init__(self, dstar: DiGraph, g: Dict[Edge, int],
+                 classes: Sequence[TreeClass], ci: int, x: int):
+        cur = classes[ci]
+        # gadget: one node s_i per other *incomplete* class
+        others = [c for j, c in enumerate(classes)
+                  if j != ci and c.mult > 0
+                  and len(c.vset) < dstar.num_compute]
+        sum_m = sum(c.mult for c in others)
+        inf = sum_m + sum(g.values()) + cur.mult + 1
+        edges = [(a, b, c) for (a, b), c in g.items() if c > 0]
+        for j, c in enumerate(others):
+            sid = dstar.num_nodes + j
+            edges.append((x, sid, c.mult))
+            edges.extend((sid, v, inf) for v in c.verts)
+        self.net = FlowNetwork(dstar.num_nodes + len(others))
+        self.net.add_edges(edges)
+        self.g, self.cur, self.x, self.sum_m = g, cur, x, sum_m
+        self._used = False
+
+    def mu(self, y: int) -> int:
+        want = min(self.g[(self.x, y)], self.cur.mult)
+        if self._used:
+            self.net.reset_flow()
+        self._used = True
+        f = self.net.maxflow(self.x, y, limit=self.sum_m + want)
+        return min(want, f - self.sum_m)
 
 
 # ---------------------------------------------------------------------- #

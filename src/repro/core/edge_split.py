@@ -24,7 +24,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .graph import DiGraph, Edge, validate_eulerian
-from .maxflow import FlowNetwork
+from .maxflow import SourcedNetwork
 
 PairPriority = Callable[[int, int, int], object]  # (u, w, t) -> sort key
 
@@ -45,23 +45,19 @@ class EdgeSplitError(RuntimeError):
 # Theorem 8: maximum splittable capacity for a concrete (e, f) pair
 # ---------------------------------------------------------------------- #
 
-def _flow_net(d: DiGraph, k: int, inf: int,
-              extra: Sequence[Tuple[int, int, int]]) -> Tuple[FlowNetwork, int]:
-    """D_k plus arbitrary extra edges; returns (net, source_node_id)."""
-    net = FlowNetwork(d.num_nodes + 1)
-    s = d.num_nodes
-    for (a, b), c in d.cap.items():
-        net.add_edge(a, b, c)
-    for u in sorted(d.compute):
-        net.add_edge(s, u, k)
-    for (a, b, c) in extra:
-        net.add_edge(a, b, c)
-    return net, s
+def _dk_net(d: DiGraph, k: int,
+            extra: Sequence[Tuple[int, int, int]] = ()) -> SourcedNetwork:
+    """The D_k shape (super-source tied cap-k to every compute node) plus
+    optional gadget edges, built once and re-probed in place."""
+    return SourcedNetwork(d, {u: k for u in sorted(d.compute)}, extra=extra)
 
 
 def max_split_capacity(d: DiGraph, k: int, u: int, w: int, t: int) -> int:
     """Theorem 8 / eq. (2): max M such that splitting (u,w),(w,t) by M keeps
-    min_v F(s, v; D^ef_k) >= |Vc| k.  Requires u != t."""
+    min_v F(s, v; D^ef_k) >= |Vc| k.  Requires u != t.
+
+    One network per term serves every v: the per-sink ∞ gadget edge is a
+    pre-installed capacity-0 edge toggled between sinks."""
     assert u != t, "degenerate pair handled by max_discard_capacity"
     c_uw = d.cap.get((u, w), 0)
     c_wt = d.cap.get((w, t), 0)
@@ -71,28 +67,37 @@ def max_split_capacity(d: DiGraph, k: int, u: int, w: int, t: int) -> int:
     nk = d.num_compute * k
     inf = sum(d.cap.values()) + nk + bound + 1
     limit = nk + bound  # flows above this are non-binding
+    s_id = d.num_nodes
 
     best = bound
     # term 3: min_v F(u, w; D̂_(u,w),v) - |Vc|k   with ∞ edges (u,s),(u,t),(v,w)
+    net3 = _dk_net(d, k, extra=[(u, s_id, inf), (u, t, inf)])
+    vw = {v: net3.add_probe_edge(v, w) for v in sorted(d.compute) if v != u}
+    active = None
     for v in sorted(d.compute):
         if v == u:
             continue  # ∞ edge (v,w)=(u,w) makes F infinite — non-binding
-        s_id = d.num_nodes
-        net, _ = _flow_net(d, k, inf,
-                           [(u, s_id, inf), (u, t, inf), (v, w, inf)])
-        f = net.maxflow(u, w, limit=limit)
+        if active is not None:
+            net3.net.set_edge_cap(active, 0)
+        active = vw[v]
+        net3.net.set_edge_cap(active, inf)
+        f = net3.flow(u, w, limit=limit)
         best = min(best, f - nk)
         if best <= 0:
             return 0
         limit = min(limit, nk + best)
     # term 4: min_v F(w, t; D̂_(w,t),v) - |Vc|k   with ∞ edges (w,s),(u,t),(v,t)
+    net4 = _dk_net(d, k, extra=[(w, s_id, inf), (u, t, inf)])
+    vt = {v: net4.add_probe_edge(v, t) for v in sorted(d.compute) if v != t}
+    active = None
     for v in sorted(d.compute):
-        s_id = d.num_nodes
-        extra = [(w, s_id, inf), (u, t, inf)]
+        if active is not None:
+            net4.net.set_edge_cap(active, 0)
+            active = None
         if v != t:
-            extra.append((v, t, inf))
-        net, _ = _flow_net(d, k, inf, extra)
-        f = net.maxflow(w, t, limit=limit)
+            active = vt[v]
+            net4.net.set_edge_cap(active, inf)
+        f = net4.flow(w, t, limit=limit)
         best = min(best, f - nk)
         if best <= 0:
             return 0
@@ -102,28 +107,27 @@ def max_split_capacity(d: DiGraph, k: int, u: int, w: int, t: int) -> int:
 
 def _oracle_holds(d: DiGraph, k: int) -> bool:
     """min_v F(s, v; D_k) >= |Vc| k (Theorem 5 condition)."""
-    nk = d.num_compute * k
-    for v in sorted(d.compute):
-        net, s = _flow_net(d, k, 0, [])
-        if net.maxflow(s, v, limit=nk) < nk:
-            return False
-    return True
+    return _dk_net(d, k).min_source_flow_at_least(sorted(d.compute),
+                                                  d.num_compute * k)
 
 
 def max_discard_capacity(d: DiGraph, k: int, u: int, w: int) -> int:
     """Degenerate split (u,w),(w,u): capacity is simply discarded.  Find the
-    max M keeping the Theorem-5 oracle true, by monotone binary search."""
-    bound = min(d.cap.get((u, w), 0), d.cap.get((w, u), 0))
+    max M keeping the Theorem-5 oracle true, by monotone binary search over
+    one shared network (probes rewrite the two edge capacities in place)."""
+    c_uw = d.cap.get((u, w), 0)
+    c_wu = d.cap.get((w, u), 0)
+    bound = min(c_uw, c_wu)
     if bound == 0:
         return 0
+    net = _dk_net(d, k)
+    nk = d.num_compute * k
+    sinks = sorted(d.compute)
 
     def ok(m: int) -> bool:
-        trial = dict(d.cap)
-        for e in ((u, w), (w, u)):
-            trial[e] -= m
-            if trial[e] == 0:
-                del trial[e]
-        return _oracle_holds(DiGraph(d.num_nodes, d.compute, trial, d.name), k)
+        net.set_cap(u, w, c_uw - m)
+        net.set_cap(w, u, c_wu - m)
+        return net.min_source_flow_at_least(sinks, nk)
 
     lo_ok, hi = 0, bound
     if ok(bound):
@@ -145,30 +149,9 @@ def _oracle_holds_demands(d: DiGraph, demands: Dict[int, int]) -> bool:
     """Frank's rooted-packing condition: with a super-source s tied to each
     root u by demands[u] parallel arcs, min_v F(s, v; D) >= Σ demands —
     for broadcast ({root: λ}) this is exactly min_v F(root, v) >= λ."""
-    total = sum(demands.values())
-    for v in sorted(d.compute):
-        net = FlowNetwork(d.num_nodes + 1)
-        s = d.num_nodes
-        for (a, b), c in d.cap.items():
-            net.add_edge(a, b, c)
-        for u, m in sorted(demands.items()):
-            net.add_edge(s, u, m)
-        if net.maxflow(s, v, limit=total) < total:
-            return False
-    return True
-
-
-def _with_split(d: DiGraph, u: int, w: int, t: int, m: int) -> DiGraph:
-    """The graph after replacing m units of (u,w),(w,t) by m of (u,t)
-    (pure discard when u == t)."""
-    trial = dict(d.cap)
-    for e in ((u, w), (w, t)):
-        trial[e] -= m
-        if trial[e] == 0:
-            del trial[e]
-    if u != t:
-        trial[(u, t)] = trial.get((u, t), 0) + m
-    return DiGraph(d.num_nodes, d.compute, trial, d.name)
+    net = SourcedNetwork(d, dict(sorted(demands.items())))
+    return net.min_source_flow_at_least(sorted(d.compute),
+                                        sum(demands.values()))
 
 
 def max_split_capacity_rooted(d: DiGraph, demands: Dict[int, int],
@@ -177,13 +160,25 @@ def max_split_capacity_rooted(d: DiGraph, demands: Dict[int, int],
 
     Every cut's egress capacity is non-increasing in M under the split, so
     feasibility is monotone and a binary search on the oracle is exact (the
-    closed form of Theorem 8 only covers the uniform all-roots case)."""
-    bound = min(d.cap.get((u, w), 0), d.cap.get((w, t), 0))
+    closed form of Theorem 8 only covers the uniform all-roots case).  One
+    shared network serves the whole search: each probe rewrites the three
+    affected edge capacities in place."""
+    c_uw = d.cap.get((u, w), 0)
+    c_wt = d.cap.get((w, t), 0)
+    bound = min(c_uw, c_wt)
     if bound == 0:
         return 0
+    net = SourcedNetwork(d, dict(sorted(demands.items())))
+    c_ut = d.cap.get((u, t), 0)
+    total = sum(demands.values())
+    sinks = sorted(d.compute)
 
     def ok(m: int) -> bool:
-        return _oracle_holds_demands(_with_split(d, u, w, t, m), demands)
+        net.set_cap(u, w, c_uw - m)
+        net.set_cap(w, t, c_wt - m)
+        if u != t:
+            net.set_cap(u, t, c_ut + m)
+        return net.min_source_flow_at_least(sinks, total)
 
     if ok(bound):
         return bound

@@ -11,21 +11,24 @@ import dataclasses
 from fractions import Fraction
 
 from .graph import DiGraph
-from .maxflow import build_Dk
+from .maxflow import SourcedNetwork
 from .optimality import simplest_between
+
+
+def _fixed_k_net(g: DiGraph, k: int) -> SourcedNetwork:
+    return SourcedNetwork(g, {u: k for u in sorted(g.compute)})
+
+
+def _feasible_on(net: SourcedNetwork, k: int, U: Fraction) -> bool:
+    net.floor_graph_caps(U)
+    return net.min_source_flow_at_least(sorted(net.g.compute),
+                                        net.g.num_compute * k)
 
 
 def fixed_k_feasible(g: DiGraph, k: int, U: Fraction) -> bool:
     """Theorem 14 oracle: does G({⌊U b_e⌋}) pack k trees per root?
     (Theorem 5: min_v F(s, v; G_k(⌊U b_e⌋)) >= |Vc| k.)"""
-    floor_g = g.floor_scaled(U)
-    n = g.num_compute
-    threshold = n * k
-    for v in sorted(g.compute):
-        net, s = build_Dk(floor_g, k)
-        if net.maxflow(s, v, limit=threshold) < threshold:
-            return False
-    return True
+    return _feasible_on(_fixed_k_net(g, k), k, U)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,16 +47,17 @@ def solve_fixed_k(g: DiGraph, k: int) -> FixedKResult:
     max_b = max(g.cap.values())
     lo = Fraction((n - 1) * k, dmin)
     hi = Fraction((n - 1) * k)
-    if fixed_k_feasible(g, k, lo):
+    net = _fixed_k_net(g, k)      # one network serves every probe below
+    if _feasible_on(net, k, lo):
         return FixedKResult(k, lo, lo / k)
     gap = Fraction(1, max_b * max_b)
     while hi - lo > gap:
         mid = (lo + hi) / 2
-        if fixed_k_feasible(g, k, mid):
+        if _feasible_on(net, k, mid):
             hi = mid
         else:
             lo = mid
     cand = simplest_between(lo, hi)
     assert cand.denominator <= max_b, (cand, max_b)
-    assert fixed_k_feasible(g, k, cand), f"recovered U*={cand} infeasible"
+    assert _feasible_on(net, k, cand), f"recovered U*={cand} infeasible"
     return FixedKResult(k, cand, cand / k)

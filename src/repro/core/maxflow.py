@@ -9,10 +9,18 @@ met — a large constant-factor win.
 
 Capacities are Python ints (arbitrary precision): the optimality search
 scales capacities by binary-search denominators, which can grow large.
+
+Reuse: every binary search in the compiler probes the *same* network shape
+with different capacities, and every Theorem-5-style oracle sweeps the same
+network over all sinks.  `FlowNetwork.set_edge_cap` + `reset_flow` make one
+network serve a whole search, and `SourcedNetwork` packages the recurring
+"graph + super-source + rewritable capacities" pattern — one allocation per
+search instead of O(|Vc| · log C) fresh builds.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from fractions import Fraction
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 from .graph import DiGraph, Edge
 
@@ -47,15 +55,35 @@ class FlowNetwork:
         self.nxt.append(self.head[v]); self.head[v] = i + 1
         return i
 
+    def add_edges(self, edges: Iterable[Tuple[int, int, int]]) -> None:
+        """Bulk `add_edge` for the hot network builders — same layout, one
+        call instead of one per edge.  Edge ids are assigned in order
+        (first edge gets id len(to) before the call, then +2 per edge)."""
+        to, cap, nxt, head = self.to, self.cap, self.nxt, self.head
+        i = len(to)
+        for u, v, c in edges:
+            to.append(v); cap.append(c); nxt.append(head[u]); head[u] = i
+            i += 1
+            to.append(u); cap.append(0); nxt.append(head[v]); head[v] = i
+            i += 1
+
     def edge_flow(self, edge_id: int) -> int:
         """Flow currently pushed through edge `edge_id` (reverse residual)."""
         return self.cap[edge_id ^ 1]
 
+    def set_edge_cap(self, edge_id: int, cap: int) -> None:
+        """Rewrite edge `edge_id`'s capacity in place (clearing any flow on
+        it) — the probe primitive that lets one network serve a whole
+        binary search instead of being rebuilt per probe."""
+        self.cap[edge_id] = cap
+        self.cap[edge_id ^ 1] = 0
+
     def reset_flow(self) -> None:
-        for i in range(0, len(self.to), 2):
-            total = self.cap[i] + self.cap[i + 1]
-            self.cap[i] = total
-            self.cap[i + 1] = 0
+        cap = self.cap
+        for i in range(0, len(cap), 2):
+            total = cap[i] + cap[i + 1]
+            cap[i] = total
+            cap[i + 1] = 0
 
     # ------------------------------------------------------------------ #
     def maxflow(self, s: int, t: int, limit: Optional[int] = None) -> int:
@@ -63,7 +91,7 @@ class FlowNetwork:
         if s == t:
             raise ValueError("source == sink")
         flow = 0
-        cap, to, nxt = self.cap, self.to, self.nxt
+        cap, to, nxt, head = self.cap, self.to, self.nxt, self.head
         while limit is None or flow < limit:
             # BFS level graph
             level = [-1] * self.n
@@ -72,7 +100,7 @@ class FlowNetwork:
             qi = 0
             while qi < len(queue):
                 u = queue[qi]; qi += 1
-                i = self.head[u]
+                i = head[u]
                 while i != -1:
                     v = to[i]
                     if cap[i] > 0 and level[v] < 0:
@@ -82,7 +110,7 @@ class FlowNetwork:
             if level[t] < 0:
                 break
             # iterative DFS blocking flow with current-arc optimisation
-            it = list(self.head)
+            it = list(head)
             while True:
                 # find augmenting path in level graph
                 path: List[int] = []  # edge ids
@@ -139,6 +167,94 @@ class FlowNetwork:
                     stack.append(v)
                 i = self.nxt[i]
         return [u for u in range(self.n) if seen[u]]
+
+
+# ---------------------------------------------------------------------- #
+# Reusable oracle network
+# ---------------------------------------------------------------------- #
+
+class SourcedNetwork:
+    """A `FlowNetwork` over a `DiGraph` plus a super-source, built **once**
+    per search and re-probed in place.
+
+    Every graph edge's id is recorded so callers can rewrite capacities
+    between probes (`set_cap` / `rescale_graph_caps` / `floor_graph_caps`)
+    and the flow is cleared between sinks with `reset_flow` — replacing the
+    O(|Vc| · log C) fresh `FlowNetwork` builds the binary-search oracles
+    used to pay for.  `extra` edges (the Theorem-8 ∞ gadget edges) are
+    installed at construction; per-sink gadget edges are added with
+    `add_probe_edge` at capacity 0 and toggled with `set_edge_cap` — a
+    zero-capacity edge never carries flow, so inactive gadget edges are
+    invisible to the oracle.
+    """
+
+    __slots__ = ("g", "net", "s", "eid", "src_eid")
+
+    def __init__(self, g: DiGraph,
+                 source_caps: Optional[Mapping[int, int]] = None,
+                 extra: Sequence[Tuple[int, int, int]] = ()):
+        self.g = g
+        self.net = FlowNetwork(g.num_nodes + 1)
+        self.s = g.num_nodes
+        self.eid = {e: 2 * i for i, e in enumerate(g.cap)}
+        self.net.add_edges((u, v, c) for (u, v), c in g.cap.items())
+        self.src_eid: Dict[int, int] = {}
+        for u, m in sorted((source_caps or {}).items()):
+            self.src_eid[u] = self.net.add_edge(self.s, u, m)
+        for (a, b, c) in extra:
+            self.net.add_edge(a, b, c)
+
+    def ensure_edge(self, u: int, v: int) -> int:
+        """Edge id of (u, v), adding a capacity-0 edge if absent (probes of
+        edge-splitting moves may create logical edges the graph lacks)."""
+        e = (u, v)
+        if e not in self.eid:
+            self.eid[e] = self.net.add_edge(u, v, 0)
+        return self.eid[e]
+
+    def add_probe_edge(self, u: int, v: int) -> int:
+        """An initially-inactive (capacity 0) gadget edge, toggled per sink
+        with `FlowNetwork.set_edge_cap`."""
+        return self.net.add_edge(u, v, 0)
+
+    # -- capacity rewrites between probes ------------------------------- #
+
+    def set_cap(self, u: int, v: int, cap: int) -> None:
+        self.net.set_edge_cap(self.ensure_edge(u, v), cap)
+
+    def rescale_graph_caps(self, scale: int) -> None:
+        """caps := b_e * scale for every graph edge (Theorem-1 probes)."""
+        cap = self.g.cap
+        for e, i in self.eid.items():
+            self.net.set_edge_cap(i, cap.get(e, 0) * scale)
+
+    def floor_graph_caps(self, factor: Fraction) -> None:
+        """caps := ⌊factor * b_e⌋ for every graph edge (§2.4 probes)."""
+        cap = self.g.cap
+        for e, i in self.eid.items():
+            self.net.set_edge_cap(i, int(factor * cap.get(e, 0)))
+
+    def set_source_caps(self, cap: int) -> None:
+        for i in self.src_eid.values():
+            self.net.set_edge_cap(i, cap)
+
+    # -- oracle sweeps --------------------------------------------------- #
+
+    def min_source_flow_at_least(self, sinks: Iterable[int],
+                                 threshold: int) -> bool:
+        """min_{v ∈ sinks} F(s, v) >= threshold, early-exiting per sink and
+        on first failure (the Theorem-1/5 oracle shape)."""
+        net, s = self.net, self.s
+        for v in sinks:
+            net.reset_flow()
+            if net.maxflow(s, v, limit=threshold) < threshold:
+                return False
+        return True
+
+    def flow(self, a: int, b: int, limit: Optional[int] = None) -> int:
+        """One maxflow a->b from a clean (reset) state."""
+        self.net.reset_flow()
+        return self.net.maxflow(a, b, limit=limit)
 
 
 # ---------------------------------------------------------------------- #

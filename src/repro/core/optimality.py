@@ -18,28 +18,35 @@ from fractions import Fraction
 from typing import Optional, Tuple
 
 from .graph import DiGraph, validate_eulerian
-from .maxflow import build_Dk
+from .maxflow import SourcedNetwork
 
 
 # ---------------------------------------------------------------------- #
 # Theorem 1 oracle
 # ---------------------------------------------------------------------- #
 
+def _oracle_net(g: DiGraph) -> SourcedNetwork:
+    """The Theorem-1 D_k shape (super-source tied to every compute node),
+    built once per search and re-scaled per probe."""
+    return SourcedNetwork(g, {u: 0 for u in sorted(g.compute)})
+
+
+def _feasible_on(net: SourcedNetwork, runtime: Fraction) -> bool:
+    if runtime <= 0:
+        return False
+    p, q = runtime.numerator, runtime.denominator
+    net.rescale_graph_caps(p)
+    net.set_source_caps(q)
+    threshold = net.g.num_compute * q
+    return net.min_source_flow_at_least(sorted(net.g.compute), threshold)
+
+
 def oracle_feasible(g: DiGraph, runtime: Fraction) -> bool:
     """True iff `runtime` >= 1/x*, i.e. min_v F(s, v; G_x) >= |Vc| x with
     x = 1/runtime (Theorem 1).  Implemented with integer-scaled capacities:
     runtime = p/q  =>  scale topology caps by p, source edges get cap q,
     threshold |Vc|*q."""
-    if runtime <= 0:
-        return False
-    p, q = runtime.numerator, runtime.denominator
-    n = g.num_compute
-    threshold = n * q
-    for v in sorted(g.compute):
-        net, s = build_Dk(g, q, scale=p)
-        if net.maxflow(s, v, limit=threshold) < threshold:
-            return False
-    return True
+    return _feasible_on(_oracle_net(g), runtime)
 
 
 def check_reachable(g: DiGraph) -> None:
@@ -121,13 +128,14 @@ def allgather_inv_xstar(g: DiGraph) -> Fraction:
         raise ValueError(f"{g.name}: a compute node has zero ingress")
     lo = Fraction(n - 1, dmin)
     hi = Fraction(n - 1)
-    if oracle_feasible(g, lo):
+    net = _oracle_net(g)          # one network serves every probe below
+    if _feasible_on(net, lo):
         return lo
     # invariant: lo infeasible (< 1/x*), hi feasible (>= 1/x*)
     gap = Fraction(1, dmin * dmin)
     while hi - lo > gap:
         mid = (lo + hi) / 2
-        if oracle_feasible(g, mid):
+        if _feasible_on(net, mid):
             hi = mid
         else:
             lo = mid
@@ -135,7 +143,7 @@ def allgather_inv_xstar(g: DiGraph) -> Fraction:
     # (Proposition 2); `simplest_between` finds it.
     cand = simplest_between(lo, hi)
     assert cand.denominator <= dmin, (cand, dmin)
-    assert oracle_feasible(g, cand), f"recovered {cand} not feasible"
+    assert _feasible_on(net, cand), f"recovered {cand} not feasible"
     return cand
 
 

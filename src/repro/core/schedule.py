@@ -18,6 +18,12 @@ Builders (the full collective family the paper's abstract promises):
                            the accumulation (op fusion) happening bottom-up
                            along each reversed tree
 
+All of them are thin wrappers over the staged pipeline in
+`repro.core.plan` (solve → split → pack → rounds → lower), which records
+per-stage wall time and size stats on the emitted artifact
+(`PipelineSchedule.compile_stats`) and can amortize shared stages across
+a whole collective family (`plan.compile_family`).
+
 Physical path assignment: every tree-edge unit of capacity is bound to a
 concrete switch path of the original graph G (via the edge-splitting
 `routing` table), so the simulator can re-validate the bandwidth bound on
@@ -27,22 +33,21 @@ from __future__ import annotations
 
 import dataclasses
 from fractions import Fraction
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
-from .arborescence import (TreeClass, max_tree_depth, pack_arborescences,
-                           pack_rooted_trees, verify_packing,
-                           verify_rooted_packing)
-from .edge_split import (SplitResult, expand_paths, remove_switches,
-                         remove_switches_rooted, trivial_split)
+from .arborescence import TreeClass, max_tree_depth
+from .edge_split import SplitResult, expand_paths
 from .graph import DiGraph, Edge
 from .maxflow import build_network
-from .optimality import Optimality, solve_optimality
-from .fixed_k import solve_fixed_k
+from .optimality import Optimality
 
 
-@dataclasses.dataclass(frozen=True)
-class Send:
-    """One chunk transfer on the logical graph D*."""
+class Send(NamedTuple):
+    """One chunk transfer on the logical graph D*.
+
+    A NamedTuple rather than a (frozen) dataclass: schedules materialize
+    millions of these and tuple construction is several times cheaper than
+    a frozen dataclass's per-field object.__setattr__."""
     src: int
     dst: int
     root: int      # whose shard this chunk belongs to
@@ -73,6 +78,10 @@ class PipelineSchedule:
     # in by the simulator / cache layer, carried by serialized artifacts so
     # a loaded schedule can be re-verified against its claim.
     claimed_runtime: Optional[Fraction] = None
+    # per-stage compiler instrumentation (repro.core.plan.CompileStats).
+    # Not part of the canonical artifact payload — the cache stores it in a
+    # stats sidecar, the sweep copies it into BENCH rows.
+    compile_stats: Optional[Any] = None
 
     @property
     def nodes(self) -> List[int]:
@@ -140,22 +149,24 @@ def _build_allgather_rounds(
     done = False
     while not done:
         this_round: List[Send] = []
-        new_received: List[Dict[int, int]] = [dict(r) for r in received]
+        # deliveries land after the round: reads below see pre-round state,
+        # writes are deferred (cheaper than copying every class's dict)
+        pending: List[Tuple[int, int, int]] = []
         for ci, c in enumerate(classes):
+            got_ci, sent_ci = received[ci], sent[ci]
+            mult, tot, off, root = c.mult, total[ci], offset[ci], c.root
             for e in c.edges:
                 a, b = e
-                got = received[ci].get(a, 0)
-                s = sent[ci].get(e, 0)
-                n = min(c.mult, got - s, total[ci] - s)
+                s = sent_ci.get(e, 0)
+                n = min(mult, got_ci.get(a, 0) - s, tot - s)
                 if n <= 0:
                     continue
-                for t in range(s, s + n):
-                    this_round.append(
-                        Send(src=a, dst=b, root=c.root,
-                             slot=offset[ci] + t, cls=ci))
-                sent[ci][e] = s + n
-                new_received[ci][b] = new_received[ci].get(b, 0) + n
-        received = new_received
+                this_round.extend(
+                    Send(a, b, root, off + t, ci) for t in range(s, s + n))
+                sent_ci[e] = s + n
+                pending.append((ci, b, n))
+        for ci, b, n in pending:
+            received[ci][b] = received[ci].get(b, 0) + n
         if not this_round:
             # all deliveries complete?
             done = all(
@@ -203,45 +214,19 @@ def _assign_paths(split: SplitResult, classes: Sequence[TreeClass]
 
 
 # ---------------------------------------------------------------------- #
-# Public compilers
+# Public compilers (thin wrappers over the staged pipeline in plan.py)
 # ---------------------------------------------------------------------- #
-
-def _prepare(topo: DiGraph, fixed_k: Optional[int],
-             pair_priority=None, verify: bool = False
-             ) -> Tuple[Optimality, SplitResult]:
-    """§2.1 + §2.2 (+ §2.4 if fixed_k given): optimality then switch removal."""
-    if fixed_k is None:
-        opt = solve_optimality(topo)
-        scaled = topo.scaled(opt.U)
-        k = opt.k
-    else:
-        res = solve_fixed_k(topo, fixed_k)
-        opt = Optimality(inv_x_star=res.runtime_factor, U=res.U_star,
-                         k=fixed_k)
-        scaled = topo.floor_scaled(res.U_star)
-        k = fixed_k
-    if scaled.switches and any(w in e for e in scaled.cap
-                               for w in scaled.switches):
-        split = remove_switches(scaled, k, pair_priority=pair_priority,
-                                verify=verify)
-    else:
-        split = trivial_split(scaled, k)
-    return opt, split
-
 
 def compile_allgather(topo: DiGraph, num_chunks: int = 8,
                       fixed_k: Optional[int] = None,
                       pair_priority=None, verify: bool = False
                       ) -> PipelineSchedule:
-    """End-to-end §2: bandwidth-optimal allgather pipeline schedule."""
-    opt, split = _prepare(topo, fixed_k, pair_priority, verify)
-    classes = pack_arborescences(split.graph, opt.k)
-    rounds, offsets = _build_allgather_rounds(classes, num_chunks)
-    paths = _assign_paths(split, classes)
-    return PipelineSchedule(
-        kind="allgather", topo=topo, dstar=split.graph, opt=opt,
-        classes=classes, split=split, num_chunks=num_chunks, rounds=rounds,
-        class_slot_offset=offsets, path_assignment=paths)
+    """End-to-end §2: bandwidth-optimal allgather pipeline schedule
+    (staged: solve → split → pack → rounds)."""
+    from . import plan as plan_mod
+    return plan_mod.compile_plan(plan_mod.plan_for(
+        "allgather", topo, num_chunks=num_chunks, fixed_k=fixed_k,
+        pair_priority=pair_priority, verify=verify))
 
 
 def compile_reduce_scatter(topo: DiGraph, num_chunks: int = 8,
@@ -253,18 +238,10 @@ def compile_reduce_scatter(topo: DiGraph, num_chunks: int = 8,
     node forwards a chunk to its tree-parent only after all tree-children
     delivered theirs — the store-and-forward order of the forward schedule
     guarantees it."""
-    ag = compile_allgather(topo.transpose(), num_chunks, fixed_k,
-                           pair_priority, verify)
-    rounds = [
-        [Send(src=s.dst, dst=s.src, root=s.root, slot=s.slot, cls=s.cls)
-         for s in rnd]
-        for rnd in reversed(ag.rounds)]
-    return PipelineSchedule(
-        kind="reduce_scatter", topo=topo, dstar=ag.dstar.transpose(),
-        opt=ag.opt, classes=ag.classes, split=ag.split,
-        num_chunks=num_chunks, rounds=rounds,
-        class_slot_offset=ag.class_slot_offset,
-        path_assignment=ag.path_assignment)
+    from . import plan as plan_mod
+    return plan_mod.compile_plan(plan_mod.plan_for(
+        "reduce_scatter", topo, num_chunks=num_chunks, fixed_k=fixed_k,
+        pair_priority=pair_priority, verify=verify))
 
 
 @dataclasses.dataclass
@@ -291,6 +268,12 @@ class AllReduceSchedule:
             return None
         return self.rs.claimed_runtime + self.ag.claimed_runtime
 
+    @property
+    def compile_stats(self):
+        """{'rs': CompileStats, 'ag': CompileStats} of the two halves
+        (entries may be None for deserialized artifacts)."""
+        return {"rs": self.rs.compile_stats, "ag": self.ag.compile_stats}
+
     def describe(self) -> str:
         return f"allreduce = [{self.rs.describe()}] + [{self.ag.describe()}]"
 
@@ -302,11 +285,15 @@ def compile_allreduce(topo: DiGraph, num_chunks: int = 8,
     """Appendix B: pipelined allreduce as reduce-scatter composed with
     allgather — one `AllReduceSchedule` carrying both halves, serialized
     and cached as a single `repro.allreduce` artifact.  Optimal whenever
-    Theorem 19's conditions hold (see `theorem19_rs_ag_optimal`)."""
-    rs = compile_reduce_scatter(topo, num_chunks, fixed_k, pair_priority,
-                                verify)
-    ag = compile_allgather(topo, num_chunks, fixed_k, pair_priority, verify)
-    return AllReduceSchedule(rs=rs, ag=ag)
+    Theorem 19's conditions hold (see `theorem19_rs_ag_optimal`).
+
+    Compiled through `plan.compile_family`, so the §2.1 solve runs once
+    and is shared between the two halves (exact by Eulerian transpose
+    symmetry) instead of being recomputed per orientation."""
+    from . import plan as plan_mod
+    return plan_mod.compile_family(
+        topo, kinds=("allreduce",), num_chunks=num_chunks, fixed_k=fixed_k,
+        pair_priority=pair_priority, verify=verify)["allreduce"]
 
 
 def broadcast_lambda(topo: DiGraph, root: int) -> int:
@@ -316,10 +303,12 @@ def broadcast_lambda(topo: DiGraph, root: int) -> int:
     if root not in topo.compute:
         raise ValueError(f"broadcast root {root} is not a compute node")
     lam = None
+    net = build_network(topo)          # one network, reset between sinks
     for v in sorted(topo.compute):
         if v == root:
             continue
-        f = build_network(topo).maxflow(root, v)
+        net.reset_flow()
+        f = net.maxflow(root, v)
         lam = f if lam is None else min(lam, f)
     if not lam:
         raise ValueError("root cannot reach some compute node")
@@ -335,25 +324,10 @@ def compile_broadcast(topo: DiGraph, root: int, num_chunks: int = 8,
     edge-splitting variant, which preserves F(root, v) >= λ for every
     compute node v (Frank's rooted-packing condition) instead of the
     all-roots Theorem-5 oracle used by allgather."""
-    lam = broadcast_lambda(topo, root)
-    if topo.switches and any(w in e for e in topo.cap
-                             for w in topo.switches):
-        split = remove_switches_rooted(topo, {root: lam},
-                                       pair_priority=pair_priority,
-                                       verify=verify)
-    else:
-        split = trivial_split(topo, lam)
-    classes = pack_rooted_trees(split.graph, {root: lam})
-    if verify:
-        verify_rooted_packing(split.graph, {root: lam}, classes)
-    rounds, offsets = _build_allgather_rounds(classes, num_chunks)
-    opt = Optimality(inv_x_star=Fraction(len(topo.compute), lam),
-                     U=Fraction(1), k=lam)
-    paths = _assign_paths(split, classes)
-    return PipelineSchedule(
-        kind="broadcast", topo=topo, dstar=split.graph, opt=opt,
-        classes=classes, split=split, num_chunks=num_chunks, rounds=rounds,
-        class_slot_offset=offsets, path_assignment=paths)
+    from . import plan as plan_mod
+    return plan_mod.compile_plan(plan_mod.plan_for(
+        "broadcast", topo, num_chunks=num_chunks, root=root,
+        pair_priority=pair_priority, verify=verify))
 
 
 def compile_reduce(topo: DiGraph, root: int, num_chunks: int = 8,
@@ -365,15 +339,7 @@ def compile_reduce(topo: DiGraph, root: int, num_chunks: int = 8,
     forwards each chunk slot to its tree-parent only after all tree-children
     delivered theirs, so the reduction op is fused bottom-up along the tree:
     a node sends one accumulated partial per slot, never raw operands."""
-    bc = compile_broadcast(topo.transpose(), root, num_chunks,
-                           pair_priority=pair_priority, verify=verify)
-    rounds = [
-        [Send(src=s.dst, dst=s.src, root=s.root, slot=s.slot, cls=s.cls)
-         for s in rnd]
-        for rnd in reversed(bc.rounds)]
-    return PipelineSchedule(
-        kind="reduce", topo=topo, dstar=bc.dstar.transpose(),
-        opt=bc.opt, classes=bc.classes, split=bc.split,
-        num_chunks=num_chunks, rounds=rounds,
-        class_slot_offset=bc.class_slot_offset,
-        path_assignment=bc.path_assignment)
+    from . import plan as plan_mod
+    return plan_mod.compile_plan(plan_mod.plan_for(
+        "reduce", topo, num_chunks=num_chunks, root=root,
+        pair_priority=pair_priority, verify=verify))

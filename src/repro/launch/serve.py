@@ -1,5 +1,12 @@
 """Production serving driver: TP-sharded params + batched engine.
 
+Parameter/checkpoint distribution goes through the paper's collective
+layer: with model-parallel > 1 the host-initialized parameters are
+replicated to every device by the cached single-root broadcast artifact
+(`tree_broadcast` under shard_map) before the TP sharding is applied —
+serving restarts replay the artifact from the schedule cache instead of
+recompiling it.
+
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --reduced --host-devices 4 --model-parallel 4
 """
@@ -8,6 +15,7 @@ from __future__ import annotations
 import argparse
 import os
 import sys
+import time
 
 
 def main() -> int:
@@ -23,6 +31,10 @@ def main() -> int:
     ap.add_argument("--schedule-cache", default="",
                     help="pre-compile the model-axis tree-pipeline collective "
                          "programs into this on-disk artifact cache")
+    ap.add_argument("--no-broadcast-params", action="store_true",
+                    help="skip the tree-broadcast parameter distribution "
+                         "(saves the broadcast schedule compile on boot "
+                         "when no cache is warmed)")
     args = ap.parse_args()
 
     if args.host_devices and "XLA_FLAGS" not in os.environ:
@@ -45,22 +57,60 @@ def main() -> int:
     devs = jax.devices()[:mp]
     mesh = Mesh(np.array(devs).reshape(1, mp), ("data", "model"))
 
-    if args.schedule_cache:
+    broadcast_params = mp > 1 and not args.no_broadcast_params
+    ctx = None
+    if args.schedule_cache or broadcast_params:
         # Serving restarts are frequent; warm the artifact cache with the
         # model-axis tree-pipeline programs so only the first boot pays for
         # schedule compilation (pipeline-collectives consumers load them;
-        # the XLA-collective engine below is unaffected).
-        from repro.cache import ScheduleCache
+        # the XLA-collective engine below is unaffected).  With mp > 1 the
+        # context also provides the broadcast program used to distribute
+        # the parameters below.
         from repro.comms import CollectiveContext
-        cache = ScheduleCache(args.schedule_cache)
+        cache = None
+        if args.schedule_cache:
+            from repro.cache import ScheduleCache
+            cache = ScheduleCache(args.schedule_cache)
         ctx = CollectiveContext({"data": 1, "model": mp},
                                 schedule_cache=cache)
         print(ctx.describe())
-        print(cache.describe())
+        if cache is not None:
+            print(cache.describe())
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0),
                         jnp.float32 if args.reduced else jnp.bfloat16)
+    if broadcast_params:
+        # Distribute the host-initialized checkpoint through the cached
+        # single-root broadcast artifact: every device ends up with the
+        # root's bytes (MPI_Bcast semantics) before TP sharding applies.
+        from repro.comms import tree_broadcast
+        try:
+            from jax import shard_map
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        prog = ctx.broadcast_program("model", root=0)
+
+        def _bcast_tree(tree):
+            return jax.tree.map(
+                lambda x: tree_broadcast(x, prog, "model"), tree)
+
+        kwargs = dict(mesh=mesh, in_specs=P(), out_specs=P())
+        try:
+            bcast = shard_map(_bcast_tree, check_rep=False, **kwargs)
+        except TypeError:       # newer jax: check_rep retired
+            bcast = shard_map(_bcast_tree, **kwargs)
+        t0 = time.perf_counter()
+        with mesh:
+            params = jax.jit(bcast)(params)
+        params = jax.block_until_ready(params)
+        print(f"params distributed via tree broadcast "
+              f"(root=0, axis=model, {mp} devices) in "
+              f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
+    if ctx is not None:
+        print(ctx.compile_stats_report())
     p_spec = serving_param_specs(jax.eval_shape(lambda: params), mesh)
     with mesh:
         params = jax.device_put(params, to_named(p_spec, mesh))

@@ -90,6 +90,10 @@ def main() -> int:
         print(ctx.describe())
         if cache is not None:
             print(cache.describe())
+        if args.collectives != "pipeline":
+            # pipeline mode prints the report after the allreduce artifact
+            # is acquired; here the per-axis AG/RS programs are all there is
+            print(ctx.compile_stats_report())
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg, remat=True)
@@ -132,6 +136,9 @@ def main() -> int:
         from jax.sharding import PartitionSpec as P
 
         red = ctx.bucketed_allreduce("data", wire_dtype=None)
+        # the cached allreduce artifact is now acquired (compiled or
+        # replayed) — log which pipeline stage the time went to
+        print(ctx.compile_stats_report())
 
         def grad_reduce(tree):
             return jax.tree.map(lambda x: x / dp, red(tree))

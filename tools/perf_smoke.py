@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Perf-smoke gate: fail if the smoke sweep's total compile time regressed
+more than --factor (default 1.25x, i.e. >25%) vs the committed
+`BENCH_schedules.json` baseline.
+
+The baseline is the sum of `compile_time_s` over the committed entries for
+the smoke topologies (all collectives); the measurement is either a
+freshly-run smoke sweep (default) or an already-emitted sweep document
+passed with --measured (CI reuses the smoke sweep it just ran).  Per-stage
+`compile_stats` of the worst offenders are printed on failure so the
+regression points at a stage, not just a number.
+
+    python tools/perf_smoke.py                       # run + compare
+    python tools/perf_smoke.py --measured /tmp/BENCH_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+def total_compile_time(doc: dict, pairs) -> float:
+    """Sum compile_time_s over the given (name, kind) pairs — both sides
+    of the comparison must cover the same pairs, or a partial measurement
+    would be held against a fuller baseline (or vice versa)."""
+    return sum(e["compile_time_s"] for e in doc["entries"]
+               if (e["name"], e["kind"]) in pairs)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=str(REPO / "BENCH_schedules.json"),
+                    help="committed sweep scoreboard to compare against")
+    ap.add_argument("--measured", default=None,
+                    help="an already-emitted sweep JSON; omitted = run the "
+                         "smoke sweep now (jobs=1 for stable timing)")
+    ap.add_argument("--factor", type=float, default=1.25,
+                    help="fail when measured > factor * baseline")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    from repro.cache import SMOKE_NAMES, run_sweep
+
+    baseline_doc = json.loads(Path(args.baseline).read_text())
+    if args.measured:
+        measured_doc = json.loads(Path(args.measured).read_text())
+    else:
+        measured_doc = run_sweep(names=SMOKE_NAMES, jobs=1)
+
+    base_pairs = {(e["name"], e["kind"]) for e in baseline_doc["entries"]}
+    pairs = {(e["name"], e["kind"]) for e in measured_doc["entries"]
+             if e["name"] in SMOKE_NAMES} & base_pairs
+    if not pairs:
+        print("perf-smoke: measured document shares no smoke (name, kind) "
+              "pairs with the baseline", file=sys.stderr)
+        return 2
+    baseline = total_compile_time(baseline_doc, pairs)
+    measured = total_compile_time(measured_doc, pairs)
+    budget = args.factor * baseline
+    verdict = "OK" if measured <= budget else "FAIL"
+    print(f"perf-smoke[{verdict}]: measured {measured:.3f}s vs baseline "
+          f"{baseline:.3f}s over {len(pairs)} (topology, kind) pairs "
+          f"{sorted({n for n, _ in pairs})} "
+          f"(budget {budget:.3f}s = {args.factor:.2f}x)")
+    if measured <= budget:
+        return 0
+    worst = sorted(measured_doc["entries"], key=lambda e: -e["compile_time_s"])
+    for e in worst[:5]:
+        print(f"  {e['name']}.{e['kind']}: {e['compile_time_s']:.3f}s "
+              f"stages={e.get('compile_stats')}", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
