@@ -10,5 +10,6 @@ from .serialize import (CACHE_SCHEMA_VERSION, SCHEDULE_KINDS,  # noqa: F401
                         stats_to_payload)
 from .store import CacheStats, ScheduleCache, default_cache_dir  # noqa: F401
 from .sweep import (COLLECTIVES, FIXED_K_COLLECTIVES,  # noqa: F401
-                    SMOKE_NAMES, claim_mismatches, default_out_path,
-                    run_sweep, sweep_registry)
+                    LARGE_NAMES, PERF_GATE_NAMES, SMOKE_NAMES,
+                    claim_mismatches, default_out_path, run_sweep,
+                    sweep_registry)

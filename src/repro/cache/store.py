@@ -375,13 +375,17 @@ class ScheduleCache:
 
     def family(self, topo: DiGraph, kinds: Sequence[str],
                num_chunks: int = 8, fixed_k: Optional[int] = None,
-               root: Optional[int] = None) -> Dict[str, Artifact]:
+               root: Optional[int] = None,
+               timings: Optional[Dict[str, float]] = None
+               ) -> Dict[str, Artifact]:
         """Cached `plan.compile_family`: load every hit, then compile all
         remaining kinds **together** so the misses share solve/split/pack
         products instead of compiling independently.  Keys are identical to
         the per-kind methods', so family- and per-kind lookups share
         entries.  Rooted kinds need `root`; `fixed_k` applies to the
-        allgather family only."""
+        allgather family only.  A `timings` dict receives per-kind wall
+        seconds (load time for hits, marginal compile time for misses)."""
+        import time as _time
         out: Dict[str, Artifact] = {}
         missing: List[tuple] = []
         for kind in kinds:
@@ -389,16 +393,20 @@ class ScheduleCache:
             key = self.key(kind, topo, num_chunks,
                            fixed_k=None if rooted else fixed_k,
                            root=root if rooted else None)
+            t0 = _time.perf_counter()
             hit = self._load(key, allreduce=kind == "allreduce")
             if hit is not None:
                 out[kind] = hit
+                if timings is not None:
+                    timings[kind] = _time.perf_counter() - t0
             else:
                 missing.append((kind, key))
         if missing:
             from repro.core import plan as plan_mod
             compiled = plan_mod.compile_family(
                 topo, kinds=[k for k, _ in missing], num_chunks=num_chunks,
-                root=root, fixed_k=fixed_k, verify=self.verify_on_compile)
+                root=root, fixed_k=fixed_k, verify=self.verify_on_compile,
+                timings=timings)
             for kind, key in missing:
                 self._store(key, compiled[kind])
                 out[kind] = compiled[kind]

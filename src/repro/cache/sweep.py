@@ -18,18 +18,32 @@ Collectives swept (``--collectives`` selects a subset):
   allreduce                  — Appendix B RS+AG composition, cached as one
                                artifact
 
-Every v3 row carries the staged compiler's per-stage wall times
+The sweep compiles each topology's collectives **as one family**
+(`plan.compile_family` / `ScheduleCache.family`): the §2.1 solve and the
+split/pack products are shared across kinds (allreduce reuses its
+allgather / reduce-scatter siblings outright), byte-identical to the
+per-kind compilers.  Each row's ``compile_time_s`` is that kind's
+*marginal* wall time — shared stage work is charged to the kind that
+triggered it, so the rows of one topology sum to its family compile time.
+
+Every v4 row carries the staged compiler's per-stage wall times
 (``compile_stats``: solve/split/pack/rounds seconds) alongside the total
-``compile_time_s``, so perf work can see *which* stage moved.
+``compile_time_s``, plus the oracle-engine work counters
+(``oracle_probes`` / ``oracle_augments``: maxflow calls and augmenting
+paths summed over the stages that produced the artifact), so perf work can
+see *which* stage moved and whether oracle reuse is paying off.  Note that
+an artifact emitted from shared plan products reports the shared stages'
+times/counters (the work that *produced* it), which can exceed its own
+marginal ``compile_time_s``.
 
 ``--fixed-k K`` sweeps the §2.4 fixed-tree-count variant over the zoo
 (allgather family only — rooted kinds always use k = λ(root)); topologies
 where the floor-scaled graph can't be compiled for that k are reported in
 the document's ``skipped`` list rather than failing the sweep.
 
-Runs (topology, collective) pairs in parallel with `concurrent.futures`;
-pass a cache dir to make repeated sweeps (and any launch that follows) skip
-compilation.
+Runs topologies in parallel with `concurrent.futures` (each worker
+compiles one topology's whole family); pass a cache dir to make repeated
+sweeps (and any launch that follows) skip compilation.
 
     PYTHONPATH=src python -m repro.cache.sweep --out BENCH_schedules.json
     PYTHONPATH=src python -m repro.cache.sweep --smoke   # 3 topologies, <60s
@@ -56,8 +70,17 @@ from repro.topo import (bcube, bidir_ring, degrade_link, dgx_box, dragonfly,
 from .fingerprint import compiler_fingerprint
 
 BENCH_FORMAT = "repro.bench_schedules"
-BENCH_VERSION = 3
+BENCH_VERSION = 4
 SMOKE_NAMES = ("ring8", "hypercube3", "fig1a")
+# the scaled-up zoo rows (64-compute fabrics where split/pack dominate);
+# all of them are committed BENCH rows, and a full sweep document fed to
+# tools/perf_smoke.py --measured gates every one of them
+LARGE_NAMES = ("torus8x8", "torus8x8_failed", "fattree8p4l2h",
+               "fattree8p4l2h_degraded", "dragonfly6x4",
+               "dragonfly6x4_degraded")
+# what the perf gate compiles fresh by default: the smoke rows plus the
+# cheapest scaled-up fabric (the rest are too slow for a per-CI compile)
+PERF_GATE_NAMES = SMOKE_NAMES + ("dragonfly6x4",)
 COLLECTIVES = ("allgather", "reduce_scatter", "broadcast", "reduce",
                "allreduce")
 # kinds a --fixed-k sweep exercises (rooted kinds always use k = λ(root))
@@ -102,6 +125,17 @@ def sweep_registry() -> Dict[str, Callable[[], DiGraph]]:
         "star8": lambda: star_switch(8),
         "two_cluster_3x6": lambda: two_cluster_switch(3, 6, 2),
         "multipod": lambda: multipod_topology(2, 4, 10, 1),
+        # scaled-up rows: the split/pack hot paths dominate even harder
+        # here (64 compute nodes, multi-switch fabrics) — these are the
+        # rows the warm-started oracle engine is proven on
+        "torus8x8": lambda: torus_2d(8, 8),
+        "torus8x8_failed": lambda: fail_link(torus_2d(8, 8), 0, 1),
+        "fattree8p4l2h": lambda: fat_tree(8, 4, 2),
+        "fattree8p4l2h_degraded": lambda: degrade_link(
+            fat_tree(8, 4, 2, host_cap=2), 0, 64, 1),
+        "dragonfly6x4": lambda: dragonfly(6, 4, 4, 1),
+        "dragonfly6x4_degraded": lambda: degrade_link(
+            dragonfly(6, 4, 4, 1), 0, 24, 2),
     }
 
 
@@ -119,6 +153,34 @@ def _compile(kind: str, g: DiGraph, num_chunks: int,
             g, root=root, num_chunks=num_chunks)
     return getattr(schedule_mod, f"compile_{kind}")(g, num_chunks=num_chunks,
                                                     fixed_k=fixed_k)
+
+
+def _compile_family(g: DiGraph, kinds: Sequence[str], num_chunks: int,
+                    cache_dir: Optional[str], root: Optional[int],
+                    fixed_k: Optional[int], timings: Dict[str, float],
+                    packed: Dict[str, Any]) -> Dict[str, Any]:
+    """One topology's whole collective family, stages shared across kinds
+    (cache-backed when a cache dir is given); `timings` receives per-kind
+    marginal wall seconds, `packed` the pre-rounds plans (fresh-compile
+    path only — a cache hit needs no re-rounding plan)."""
+    if cache_dir:
+        from .store import ScheduleCache
+        return ScheduleCache(cache_dir).family(
+            g, kinds, num_chunks=num_chunks, fixed_k=fixed_k, root=root,
+            timings=timings)
+    from repro.core import plan as plan_mod
+    return plan_mod.compile_family(g, kinds=kinds, num_chunks=num_chunks,
+                                   root=root, fixed_k=fixed_k,
+                                   timings=timings, packed_out=packed)
+
+
+def _rechunked(packed_plan, num_chunks: int):
+    """Rounds + emit of a packed plan at a larger chunk count (stages 1-3
+    are P-independent, so the packed products are reused as-is)."""
+    import dataclasses
+    from repro.core import plan as plan_mod
+    return plan_mod.emit(plan_mod.rounds(
+        dataclasses.replace(packed_plan, num_chunks=num_chunks)))
 
 
 _SIMULATORS = {
@@ -151,20 +213,28 @@ def _stage_seconds(sched) -> Optional[Dict[str, float]]:
     return out or None
 
 
-def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
-              cache_dir: Optional[str] = None,
-              fixed_k: Optional[int] = None) -> Dict[str, Any]:
-    """Compile one (topology, collective) pair (P >= depth enforced), verify
-    chunk-by-chunk, simulate, and return a scoreboard entry."""
-    g = sweep_registry()[name]()
-    root = min(g.compute) if kind in ("broadcast", "reduce") else None
+def _oracle_counters(sched) -> Dict[str, int]:
+    """Summed maxflow probe/augment counters over the stages that produced
+    the artifact (allreduce sums its halves; zero for uninstrumented
+    artifacts)."""
+    halves = (sched.rs, sched.ag) \
+        if isinstance(sched, schedule_mod.AllReduceSchedule) else (sched,)
+    probes = augments = 0
+    for half in halves:
+        cs = half.compile_stats
+        if cs is None:
+            continue
+        for stage in cs.stages:
+            probes += stage.meta.get("probes", 0)
+            augments += stage.meta.get("augments", 0)
+    return {"oracle_probes": probes, "oracle_augments": augments}
 
-    t0 = time.perf_counter()
-    sched = _compile(kind, g, num_chunks, cache_dir, root, fixed_k)
-    if _depth(sched) > num_chunks:     # acceptance requires P >= tree depth
-        sched = _compile(kind, g, _depth(sched), cache_dir, root, fixed_k)
-    compile_time = time.perf_counter() - t0
 
+def _entry(name: str, kind: str, g: DiGraph, root: Optional[int],
+           fixed_k: Optional[int], sched,
+           compile_time: float) -> Dict[str, Any]:
+    """Verify one compiled artifact chunk-by-chunk, simulate, and build its
+    scoreboard row."""
     rep = _SIMULATORS[kind](sched, verify=True)   # replays every chunk
     achieved = rep.sim_time
     # Cache path: `claimed` was recorded in the artifact at compile time, so
@@ -196,6 +266,7 @@ def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
         "num_chunks": num_p,
         "compile_time_s": round(compile_time, 6),
         "compile_stats": _stage_seconds(sched),
+        **_oracle_counters(sched),
         "inv_x_star": str(opt.inv_x_star),
         "U": str(opt.U),
         "k": opt.k,
@@ -212,22 +283,78 @@ def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
     }
 
 
-def _sweep_pair(name: str, kind: str, num_chunks: int,
-                cache_dir: Optional[str],
-                fixed_k: Optional[int]) -> Dict[str, Any]:
-    """One sweep entry; under --fixed-k, topologies that can't compile for
-    the requested k (e.g. the floor-scaled graph loses the Eulerian
-    condition) become a `skipped` record instead of killing the sweep.
-    Only the known infeasibility errors are tolerated — a PackingError or
-    a verification failure is a compiler bug and still fails the run."""
+def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
+              cache_dir: Optional[str] = None,
+              fixed_k: Optional[int] = None) -> Dict[str, Any]:
+    """Compile one (topology, collective) pair (P >= depth enforced), verify
+    chunk-by-chunk, simulate, and return a scoreboard entry."""
+    g = sweep_registry()[name]()
+    root = min(g.compute) if kind in ("broadcast", "reduce") else None
+    t0 = time.perf_counter()
+    sched = _compile(kind, g, num_chunks, cache_dir, root, fixed_k)
+    if _depth(sched) > num_chunks:     # acceptance requires P >= tree depth
+        sched = _compile(kind, g, _depth(sched), cache_dir, root, fixed_k)
+    compile_time = time.perf_counter() - t0
+    return _entry(name, kind, g, root, fixed_k, sched, compile_time)
+
+
+def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
+                    cache_dir: Optional[str],
+                    fixed_k: Optional[int]) -> List[Dict[str, Any]]:
+    """All of one topology's sweep rows, compiled as a single family so
+    solve/split/pack are amortized across the collective kinds; each row's
+    ``compile_time_s`` is its kind's marginal wall time.
+
+    Under --fixed-k, topologies that can't compile for the requested k
+    (e.g. the floor-scaled graph loses the Eulerian condition) fall back to
+    per-kind compilation so any kind that *can* compile still gets a row,
+    and the infeasible kinds become `skipped` records instead of killing
+    the sweep.  Only the known infeasibility errors are tolerated — a
+    PackingError or a verification failure is a compiler bug and still
+    fails the run."""
     from repro.core.edge_split import EdgeSplitError
+    g = sweep_registry()[name]()
+    root = (min(g.compute)
+            if any(k in ("broadcast", "reduce") for k in kinds) else None)
     try:
-        return sweep_one(name, kind, num_chunks, cache_dir, fixed_k)
+        timings: Dict[str, float] = {}
+        packed: Dict[str, Any] = {}
+        arts = _compile_family(g, kinds, num_chunks, cache_dir, root,
+                               fixed_k, timings, packed)
     except (EdgeSplitError, ValueError) as e:
         if fixed_k is None:
             raise
-        return {"name": name, "kind": kind, "fixed_k": fixed_k,
-                "skipped": f"{type(e).__name__}: {e}"}
+        results = []
+        for kind in kinds:
+            try:
+                results.append(sweep_one(name, kind, num_chunks, cache_dir,
+                                         fixed_k))
+            except (EdgeSplitError, ValueError) as e:
+                results.append({"name": name, "kind": kind,
+                                "fixed_k": fixed_k,
+                                "skipped": f"{type(e).__name__}: {e}"})
+        return results
+    rows = []
+    for kind in kinds:
+        sched = arts[kind]
+        kind_root = root if kind in ("broadcast", "reduce") else None
+        extra = 0.0
+        if _depth(sched) > num_chunks:  # acceptance requires P >= tree depth
+            t0 = time.perf_counter()
+            need = _depth(sched)
+            if kind == "allreduce" and "reduce_scatter" in packed:
+                sched = schedule_mod.AllReduceSchedule(
+                    rs=_rechunked(packed["reduce_scatter"], need),
+                    ag=_rechunked(packed["allgather"], need))
+            elif kind in packed:
+                sched = _rechunked(packed[kind], need)
+            else:   # cache path: re-ask the cache at the larger P
+                sched = _compile(kind, g, need, cache_dir, kind_root,
+                                 None if kind_root is not None else fixed_k)
+            extra = time.perf_counter() - t0
+        rows.append(_entry(name, kind, g, kind_root, fixed_k, sched,
+                           timings.get(kind, 0.0) + extra))
+    return rows
 
 
 def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
@@ -252,18 +379,18 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
         if rooted:
             raise KeyError(f"--fixed-k does not apply to rooted kinds "
                            f"{rooted} (k = λ(root) there)")
-    pairs = [(n, c) for n in names for c in collectives]
-    jobs = jobs if jobs is not None else min(len(pairs),
+    jobs = jobs if jobs is not None else min(len(names),
                                              max(1, (os.cpu_count() or 2)))
-    if jobs <= 1 or len(pairs) <= 1:
-        results = [_sweep_pair(n, c, num_chunks, cache_dir, fixed_k)
-                   for n, c in pairs]
+    if jobs <= 1 or len(names) <= 1:
+        grouped = [_sweep_topology(n, collectives, num_chunks, cache_dir,
+                                   fixed_k) for n in names]
     else:
         with concurrent.futures.ProcessPoolExecutor(max_workers=jobs) as ex:
-            futs = {ex.submit(_sweep_pair, n, c, num_chunks, cache_dir,
-                              fixed_k): (n, c)
-                    for n, c in pairs}
-            results = [f.result() for f in futs]
+            futs = {ex.submit(_sweep_topology, n, collectives, num_chunks,
+                              cache_dir, fixed_k): n
+                    for n in names}
+            grouped = [f.result() for f in futs]
+    results = [e for rows in grouped for e in rows]
     entries = [e for e in results if "skipped" not in e]
     skipped = [e for e in results if "skipped" in e]
     order = lambda e: (e["name"], COLLECTIVES.index(e["kind"]))  # noqa: E731

@@ -146,17 +146,28 @@ def schedules_for_topology(topo: DiGraph, num_chunks: int = 8,
     serialized artifact and never invokes the compiler.
 
     kind selects the collective:
-      None             — legacy pair: (allgather, reduce_scatter)
+      None             — pair: (allgather, reduce_scatter), compiled as one
+                         family so the §2.1 solve and the split/pack
+                         products are shared between the two orientations
+                         (`ScheduleCache.family` on the cache path,
+                         `plan.compile_family` otherwise — byte-identical
+                         to the per-kind compilers)
       "allgather" / "reduce_scatter" — one PipelineSchedule
       "broadcast" / "reduce"         — one PipelineSchedule; `root` required
       "allreduce"      — one AllReduceSchedule (RS + AG sharing one cached
                          artifact)
     """
     if kind is None:
-        return (schedules_for_topology(topo, num_chunks, fixed_k, cache,
-                                       kind="allgather"),
-                schedules_for_topology(topo, num_chunks, fixed_k, cache,
-                                       kind="reduce_scatter"))
+        pair = ("allgather", "reduce_scatter")
+        if cache is not None:
+            arts = cache.family(topo, pair, num_chunks=num_chunks,
+                                fixed_k=fixed_k)
+        else:
+            from repro.core import plan as plan_mod
+            arts = plan_mod.compile_family(topo, kinds=pair,
+                                           num_chunks=num_chunks,
+                                           fixed_k=fixed_k)
+        return arts["allgather"], arts["reduce_scatter"]
     if kind in ("broadcast", "reduce"):
         if root is None:
             raise ValueError(f"{kind} schedules need an explicit root")

@@ -59,6 +59,10 @@ class CollectiveContext:
         return self._topologies[axis]
 
     def axis(self, axis: str) -> AxisSchedules:
+        """AG + RS schedules and programs for one axis, compiled as a
+        single family (`ScheduleCache.family` when a cache is attached):
+        the §2.1 solve and the split/pack products are shared between the
+        two orientations instead of being recomputed per kind."""
         if axis not in self._cache:
             topo = self.topology(axis)
             ag, rs = schedules_for_topology(

@@ -41,16 +41,28 @@ class TreeClass:
     verts: List[int]               # vertices in addition order (root first)
     edges: List[Edge]              # tree edges in addition order
     vset: set = dataclasses.field(default_factory=set)
+    depth: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
         self.vset = set(self.verts)
+        d = {self.root: 0}
+        for (a, b) in self.edges:
+            d[b] = d[a] + 1
+        self.depth = d
+
+    def add_edge(self, e: Edge) -> None:
+        """Grow the tree by edge e = (a, b): b joins the vertex order and
+        the depth map incrementally (no O(|E|) recomputation)."""
+        a, b = e
+        self.edges.append(e)
+        self.verts.append(b)
+        self.vset.add(b)
+        self.depth[b] = self.depth[a] + 1
 
     def depth_of(self, v: int) -> int:
-        """Depth of v in the tree (root = 0)."""
-        depth = {self.root: 0}
-        for (a, b) in self.edges:
-            depth[b] = depth[a] + 1
-        return depth[v]
+        """Depth of v in the tree (root = 0) — a dict lookup; the map is
+        maintained incrementally by `add_edge`."""
+        return self.depth[v]
 
     def parent_map(self) -> Dict[int, int]:
         return {b: a for (a, b) in self.edges}
@@ -95,27 +107,32 @@ def pack_rooted_trees(dstar: DiGraph,
     queue: List[int] = list(range(len(classes)))
     all_v = set(nodes)
 
+    sinks = sorted(dstar.compute)
     qi = 0
     while qi < len(queue):
         ci = queue[qi]
         cur = classes[ci]
+        # Theorem-12 gadget networks, one per tail x, kept *across* picks
+        # for the whole growth of this class: a pick no longer rebuilds
+        # them — it applies its residual-capacity delta (and any split-off
+        # class) to every cached gadget in place.
+        gadgets: Dict[int, _MuGadget] = {}
         while cur.vset != all_v:
             picked = False
             # candidate edges: BFS-like order (oldest tail vertex first)
             for x in cur.verts:
-                # one Theorem-12 gadget network serves every sink y probed
-                # from this x (g and the class set only change on a pick,
-                # which restarts the scan)
-                gadget = None
-                for y in sorted(dstar.compute):
+                gadget = gadgets.get(x)
+                for y in sinks:
                     e = (x, y)
                     if y in cur.vset or g.get(e, 0) <= 0:
                         continue
                     if gadget is None:
                         gadget = _MuGadget(dstar, g, classes, ci, x)
+                        gadgets[x] = gadget
                     mu = gadget.mu(y)
                     if mu <= 0:
                         continue
+                    rest = None
                     if mu < cur.mult:
                         # split: a copy keeps the old shape with the rest
                         rest = TreeClass(root=cur.root, mult=cur.mult - mu,
@@ -124,10 +141,10 @@ def pack_rooted_trees(dstar: DiGraph,
                         classes.append(rest)
                         queue.append(len(classes) - 1)
                         cur.mult = mu
-                    cur.edges.append(e)
-                    cur.verts.append(y)
-                    cur.vset.add(y)
+                    cur.add_edge(e)
                     g[e] -= cur.mult
+                    for gd in gadgets.values():
+                        gd.note_pick(e, g[e], rest)
                     picked = True
                     break
                 if picked:
@@ -143,14 +160,23 @@ def pack_rooted_trees(dstar: DiGraph,
 
 class _MuGadget:
     """Theorem 12's auxiliary network D̄ for one tail vertex x, reused
-    across every candidate head y (reset_flow between sinks): µ for adding
-    edge (x,y) to classes[ci] is min{g(x,y), m(R1), F(x,y; D̄) − Σ m(R_i)}.
+    across every candidate head y (reset_flow between sinks) *and* across
+    picks: µ for adding edge (x,y) to classes[ci] is
+    min{g(x,y), m(R1), F(x,y; D̄) − Σ m(R_i)}.
 
-    The ∞ stand-in only needs to exceed the flow limit Σm + m(R1), so it
-    is sized once per gadget (not per candidate edge) — the computed µ is
-    identical for any sufficiently large value."""
+    A pick only (a) lowers one residual capacity g(e) and (b) may split off
+    a new incomplete class, so `note_pick` rewrites that one edge and
+    grafts the split class's s_i node in place instead of rebuilding the
+    network (the scan restart used to rebuild every gadget it revisited).
+    Other classes never change while classes[ci] grows, so no other state
+    can go stale.
 
-    __slots__ = ("net", "g", "cur", "x", "sum_m", "_used")
+    The ∞ stand-in only needs to exceed the flow limit Σm + m(R1), and
+    Σm + m(R1) is conserved by splits while g only shrinks, so the value
+    sized at build time stays sufficient — the computed µ is identical for
+    any sufficiently large value."""
+
+    __slots__ = ("net", "g", "cur", "x", "sum_m", "inf", "eid", "_dirty")
 
     def __init__(self, dstar: DiGraph, g: Dict[Edge, int],
                  classes: Sequence[TreeClass], ci: int, x: int):
@@ -162,20 +188,40 @@ class _MuGadget:
         sum_m = sum(c.mult for c in others)
         inf = sum_m + sum(g.values()) + cur.mult + 1
         edges = [(a, b, c) for (a, b), c in g.items() if c > 0]
+        self.eid: Dict[Edge, int] = {
+            (a, b): 2 * j for j, (a, b, _) in enumerate(edges)}
         for j, c in enumerate(others):
             sid = dstar.num_nodes + j
             edges.append((x, sid, c.mult))
             edges.extend((sid, v, inf) for v in c.verts)
         self.net = FlowNetwork(dstar.num_nodes + len(others))
         self.net.add_edges(edges)
-        self.g, self.cur, self.x, self.sum_m = g, cur, x, sum_m
-        self._used = False
+        self.g, self.cur, self.x = g, cur, x
+        self.sum_m, self.inf = sum_m, inf
+        self._dirty = False
+
+    def note_pick(self, e: Edge, new_cap: int,
+                  rest: Optional[TreeClass]) -> None:
+        """Apply a pick's delta: edge e's residual capacity dropped to
+        `new_cap`, and `rest` (if the pick split the class) joins the
+        gadget as a fresh incomplete class."""
+        eid = self.eid.get(e)
+        if eid is None:      # e had capacity 0 at build time (cannot
+            eid = self.net.add_edge(*e, 0)    # happen: g never grows), but
+            self.eid[e] = eid                 # stay safe
+        self.net.set_edge_cap(eid, new_cap)
+        if rest is not None:
+            sid = self.net.add_node()
+            self.net.add_edge(self.x, sid, rest.mult)
+            self.net.add_edges((sid, v, self.inf) for v in rest.verts)
+            self.sum_m += rest.mult
+        self._dirty = True
 
     def mu(self, y: int) -> int:
         want = min(self.g[(self.x, y)], self.cur.mult)
-        if self._used:
+        if self._dirty:
             self.net.reset_flow()
-        self._used = True
+        self._dirty = True
         f = self.net.maxflow(self.x, y, limit=self.sum_m + want)
         return min(want, f - self.sum_m)
 
@@ -232,10 +278,5 @@ def verify_rooted_packing(dstar: DiGraph, demands: Dict[int, int],
 
 
 def max_tree_depth(classes: Sequence[TreeClass]) -> int:
-    depth = 0
-    for c in classes:
-        d: Dict[int, int] = {c.root: 0}
-        for (a, b) in c.edges:
-            d[b] = d[a] + 1
-        depth = max(depth, max(d.values(), default=0))
-    return depth
+    return max((max(c.depth.values(), default=0) for c in classes),
+               default=0)

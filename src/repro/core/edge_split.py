@@ -8,6 +8,17 @@ a unit on the direct logical edge ``(u, t)`` while preserving
 Theorem 8 gives the *maximum* capacity M splittable in one shot via 2|Vc|
 maxflows, which makes Algorithm 1 strongly polynomial (capacity-independent).
 
+Oracle engine: one incremental prober serves a whole `remove_switches`
+run.  The Theorem-8 term scans share a single D_k `SourcedNetwork` (gadget
+edges are pre-installed capacity-0 parallels toggled in place — two fresh
+network builds per (u, w, t) pair became zero), remember the last *binding*
+sink per switch and probe it first (the running minimum tightens the flow
+`limit` immediately, so the remaining probes early-exit almost at once; the
+final minimum is order-independent), and the degenerate-discard / rooted
+binary searches descend on warm-started per-sink flows
+(`min_source_flow_at_least(..., warm=True)`) instead of recomputing each
+probe from a cold residual network.
+
 We also keep the paper's `routing` table: ``routing[(u,t)][w] = M`` records
 that M units of the logical edge (u,t) physically traverse switch w.  After
 tree construction, `expand_paths` recovers the concrete switch paths, which
@@ -42,7 +53,7 @@ class EdgeSplitError(RuntimeError):
 
 
 # ---------------------------------------------------------------------- #
-# Theorem 8: maximum splittable capacity for a concrete (e, f) pair
+# Theorem 8: maximum splittable capacity (shared incremental prober)
 # ---------------------------------------------------------------------- #
 
 def _dk_net(d: DiGraph, k: int,
@@ -52,93 +63,206 @@ def _dk_net(d: DiGraph, k: int,
     return SourcedNetwork(d, {u: k for u in sorted(d.compute)}, extra=extra)
 
 
+class _TheoremEightProber:
+    """One D_k oracle network serving every Theorem-8 term scan *and* every
+    degenerate-discard binary search of an Algorithm-1 run.
+
+    Gadget edges (the per-term ∞ edges and per-sink probe edges) are
+    capacity-0 parallels added lazily and toggled in place; `sync` mirrors
+    each applied split's 3 capacity changes into the network.  The ∞
+    stand-in only needs to exceed every flow limit ever probed; capacity
+    never enters the system after construction (splits move or discard it),
+    so one value sized from the initial graph stays valid for the whole
+    run — the computed M is identical for any sufficiently large value.
+    """
+
+    def __init__(self, d: DiGraph, k: int):
+        self.d = d
+        self.k = k
+        self.nk = d.num_compute * k
+        self.net = _dk_net(d, k)
+        self.inf = 2 * sum(d.cap.values()) + self.nk + 1
+        self.sinks = sorted(d.compute)
+        # keyed (a, b, tag): a term's base ∞ edge and a per-sink probe edge
+        # over the same (a, b) stay separate parallels, as in the paper's D̂
+        self._gadget: Dict[Tuple[int, int, str], int] = {}
+        self._armed: List[int] = []
+        self._hot3: Dict[int, int] = {}   # switch w -> last binding sink
+        self._hot4: Dict[int, int] = {}
+
+    # -- gadget plumbing ------------------------------------------------ #
+
+    def _arm(self, a: int, b: int, cap: int, tag: str = "base") -> int:
+        eid = self._gadget.get((a, b, tag))
+        if eid is None:
+            eid = self.net.add_probe_edge(a, b)
+            self._gadget[(a, b, tag)] = eid
+        self.net.set_cap_id(eid, cap)
+        self._armed.append(eid)
+        return eid
+
+    def _disarm(self) -> None:
+        for eid in self._armed:
+            self.net.set_cap_id(eid, 0)
+        self._armed.clear()
+
+    def sync(self, edges: Sequence[Edge]) -> None:
+        """Mirror the graph capacities of `edges` (changed by an applied
+        split) into the oracle network."""
+        for e in edges:
+            if e[0] != e[1]:
+                self.net.set_cap(*e, self.d.cap.get(e, 0))
+
+    @staticmethod
+    def _hot_first(order: List[int], hot: Optional[int]) -> List[int]:
+        if hot is not None and hot in order and order[0] != hot:
+            order.remove(hot)
+            order.insert(0, hot)
+        return order
+
+    # -- Theorem 8 / eq. (2) -------------------------------------------- #
+
+    def split_cap(self, u: int, w: int, t: int) -> int:
+        """Theorem 8 / eq. (2): max M such that splitting (u,w),(w,t) by M
+        keeps min_v F(s, v; D^ef_k) >= |Vc| k.  Requires u != t.
+
+        Each term's minimum is taken sink-adaptively: the last binding sink
+        of this switch is probed first, so `limit` collapses to the final
+        minimum immediately and later probes early-exit (the minimum itself
+        is order-independent)."""
+        assert u != t, "degenerate pair handled by discard_cap"
+        d = self.d
+        c_uw = d.cap.get((u, w), 0)
+        c_wt = d.cap.get((w, t), 0)
+        bound = min(c_uw, c_wt)
+        if bound == 0:
+            return 0
+        nk = self.nk
+        limit = nk + bound  # flows above this are non-binding
+        best = bound
+
+        # term 3: min_v F(u, w; D̂_(u,w),v) - |Vc|k
+        #         with ∞ edges (u,s),(u,t),(v,w)
+        # (∞ edge (v,w)=(u,w) would make F infinite, so v == u is skipped)
+        best = self._term_min(
+            src=u, snk=w, base=((u, self.net.s), (u, t)),
+            order=self._hot_first([v for v in self.sinks if v != u],
+                                  self._hot3.get(w)),
+            probe_head=w, skip_probe=None, best=best, hot=self._hot3, w=w)
+        if best <= 0:
+            return 0
+
+        # term 4: min_v F(w, t; D̂_(w,t),v) - |Vc|k
+        #         with ∞ edges (w,s),(u,t),(v,t)
+        # (v == t is probed with no gadget edge: plain F(w, t))
+        best = self._term_min(
+            src=w, snk=t, base=((w, self.net.s), (u, t)),
+            order=self._hot_first(list(self.sinks), self._hot4.get(w)),
+            probe_head=t, skip_probe=t, best=best, hot=self._hot4, w=w)
+        return max(best, 0)
+
+    def _term_min(self, src: int, snk: int, base, order, probe_head: int,
+                  skip_probe: Optional[int], best: int,
+                  hot: Dict[int, int], w: int) -> int:
+        """One eq.-(2) term:  min_v F(src, snk; D̂ with (v, probe_head) ∞
+        probe edge) − |Vc|k,  folded into the running `best`.
+
+        The flow is carried *across* sinks: swapping the probe edge drains
+        the outgoing probe's flow (flow-preserving decrease) and re-augments
+        only the delta, instead of recomputing the nk-unit base flow per
+        sink.  The probe `limit` tracks nk + best; a carried flow value at
+        or above the limit means this v is non-binding (f = min(F_v, limit)
+        of the cold scan), below it the augmented value is the exact F_v —
+        identical results to per-sink cold maxflows, in any probe order."""
+        net, nk, inf = self.net, self.nk, self.inf
+        self._disarm()
+        for (a, b) in base:
+            self._arm(a, b, inf)
+        probe = None
+        value = None
+        limit = nk + best
+        for v in order:
+            if probe is not None:
+                value -= net.decrease_cap_id(probe, 0, src, snk)
+                probe = None
+            if v != skip_probe:
+                eid = self._gadget.get((v, probe_head, "probe"))
+                if eid is None:
+                    eid = self.net.add_probe_edge(v, probe_head)
+                    self._gadget[(v, probe_head, "probe")] = eid
+                self._armed.append(eid)
+                probe = eid
+            if value is None:
+                if probe is not None:
+                    net.set_cap_id(probe, inf)
+                value = net.flow(src, snk, limit=limit)
+            else:
+                if probe is not None:
+                    net.increase_cap_id(probe, inf)
+                if value < limit:
+                    value += net.net.maxflow(src, snk, limit=limit - value)
+            if value < limit:            # binding: value is the exact F_v
+                best = value - nk
+                hot[w] = v
+                if best <= 0:
+                    self._disarm()
+                    return best
+                limit = nk + best
+        self._disarm()
+        return best
+
+    # -- degenerate discard --------------------------------------------- #
+
+    def discard_cap(self, u: int, w: int) -> int:
+        """Degenerate split (u,w),(w,u): capacity is simply discarded.  Max
+        M keeping the Theorem-5 oracle true, by monotone binary search over
+        the shared network with warm-started per-sink flows (each probe
+        only moves the two rewritten capacities and re-augments)."""
+        d = self.d
+        c_uw = d.cap.get((u, w), 0)
+        c_wu = d.cap.get((w, u), 0)
+        bound = min(c_uw, c_wu)
+        if bound == 0:
+            return 0
+        self._disarm()
+        net, nk, sinks = self.net, self.nk, self.sinks
+
+        def ok(m: int) -> bool:
+            net.set_cap(u, w, c_uw - m)
+            net.set_cap(w, u, c_wu - m)
+            return net.min_source_flow_at_least(sinks, nk, warm=True)
+
+        try:
+            if ok(bound):
+                return bound
+            lo_ok, hi = 0, bound
+            while hi - lo_ok > 1:
+                mid = (lo_ok + hi) // 2
+                if ok(mid):
+                    lo_ok = mid
+                else:
+                    hi = mid
+            return lo_ok
+        finally:
+            net.set_cap(u, w, c_uw)
+            net.set_cap(w, u, c_wu)
+
+
 def max_split_capacity(d: DiGraph, k: int, u: int, w: int, t: int) -> int:
-    """Theorem 8 / eq. (2): max M such that splitting (u,w),(w,t) by M keeps
-    min_v F(s, v; D^ef_k) >= |Vc| k.  Requires u != t.
+    """One-shot Theorem-8 maximum (fresh prober; Algorithm 1 keeps a shared
+    prober across its whole run instead)."""
+    return _TheoremEightProber(d, k).split_cap(u, w, t)
 
-    One network per term serves every v: the per-sink ∞ gadget edge is a
-    pre-installed capacity-0 edge toggled between sinks."""
-    assert u != t, "degenerate pair handled by max_discard_capacity"
-    c_uw = d.cap.get((u, w), 0)
-    c_wt = d.cap.get((w, t), 0)
-    bound = min(c_uw, c_wt)
-    if bound == 0:
-        return 0
-    nk = d.num_compute * k
-    inf = sum(d.cap.values()) + nk + bound + 1
-    limit = nk + bound  # flows above this are non-binding
-    s_id = d.num_nodes
 
-    best = bound
-    # term 3: min_v F(u, w; D̂_(u,w),v) - |Vc|k   with ∞ edges (u,s),(u,t),(v,w)
-    net3 = _dk_net(d, k, extra=[(u, s_id, inf), (u, t, inf)])
-    vw = {v: net3.add_probe_edge(v, w) for v in sorted(d.compute) if v != u}
-    active = None
-    for v in sorted(d.compute):
-        if v == u:
-            continue  # ∞ edge (v,w)=(u,w) makes F infinite — non-binding
-        if active is not None:
-            net3.net.set_edge_cap(active, 0)
-        active = vw[v]
-        net3.net.set_edge_cap(active, inf)
-        f = net3.flow(u, w, limit=limit)
-        best = min(best, f - nk)
-        if best <= 0:
-            return 0
-        limit = min(limit, nk + best)
-    # term 4: min_v F(w, t; D̂_(w,t),v) - |Vc|k   with ∞ edges (w,s),(u,t),(v,t)
-    net4 = _dk_net(d, k, extra=[(w, s_id, inf), (u, t, inf)])
-    vt = {v: net4.add_probe_edge(v, t) for v in sorted(d.compute) if v != t}
-    active = None
-    for v in sorted(d.compute):
-        if active is not None:
-            net4.net.set_edge_cap(active, 0)
-            active = None
-        if v != t:
-            active = vt[v]
-            net4.net.set_edge_cap(active, inf)
-        f = net4.flow(w, t, limit=limit)
-        best = min(best, f - nk)
-        if best <= 0:
-            return 0
-        limit = min(limit, nk + best)
-    return best
+def max_discard_capacity(d: DiGraph, k: int, u: int, w: int) -> int:
+    """One-shot degenerate-discard maximum (fresh prober)."""
+    return _TheoremEightProber(d, k).discard_cap(u, w)
 
 
 def _oracle_holds(d: DiGraph, k: int) -> bool:
     """min_v F(s, v; D_k) >= |Vc| k (Theorem 5 condition)."""
     return _dk_net(d, k).min_source_flow_at_least(sorted(d.compute),
                                                   d.num_compute * k)
-
-
-def max_discard_capacity(d: DiGraph, k: int, u: int, w: int) -> int:
-    """Degenerate split (u,w),(w,u): capacity is simply discarded.  Find the
-    max M keeping the Theorem-5 oracle true, by monotone binary search over
-    one shared network (probes rewrite the two edge capacities in place)."""
-    c_uw = d.cap.get((u, w), 0)
-    c_wu = d.cap.get((w, u), 0)
-    bound = min(c_uw, c_wu)
-    if bound == 0:
-        return 0
-    net = _dk_net(d, k)
-    nk = d.num_compute * k
-    sinks = sorted(d.compute)
-
-    def ok(m: int) -> bool:
-        net.set_cap(u, w, c_uw - m)
-        net.set_cap(w, u, c_wu - m)
-        return net.min_source_flow_at_least(sinks, nk)
-
-    lo_ok, hi = 0, bound
-    if ok(bound):
-        return bound
-    while hi - lo_ok > 1:
-        mid = (lo_ok + hi) // 2
-        if ok(mid):
-            lo_ok = mid
-        else:
-            hi = mid
-    return lo_ok
 
 
 # ---------------------------------------------------------------------- #
@@ -154,42 +278,71 @@ def _oracle_holds_demands(d: DiGraph, demands: Dict[int, int]) -> bool:
                                         sum(demands.values()))
 
 
+class _RootedProber:
+    """The rooted (broadcast/reduce) analogue of `_TheoremEightProber`: one
+    demand-weighted `SourcedNetwork` serves every binary search of a
+    `remove_switches_rooted` run, with warm-started per-sink flows."""
+
+    def __init__(self, d: DiGraph, demands: Dict[int, int]):
+        self.d = d
+        self.total = sum(demands.values())
+        self.net = SourcedNetwork(d, dict(sorted(demands.items())))
+        self.sinks = sorted(d.compute)
+
+    def sync(self, edges: Sequence[Edge]) -> None:
+        for e in edges:
+            if e[0] != e[1]:
+                self.net.set_cap(*e, self.d.cap.get(e, 0))
+
+    def split_cap(self, u: int, w: int, t: int) -> int:
+        """Max M such that splitting (u,w),(w,t) by M keeps the rooted
+        oracle.  Every cut's egress capacity is non-increasing in M under
+        the split, so feasibility is monotone and a binary search on the
+        oracle is exact (the closed form of Theorem 8 only covers the
+        uniform all-roots case).  Each probe rewrites the three affected
+        capacities and re-augments the warm per-sink flows."""
+        d, net = self.d, self.net
+        c_uw = d.cap.get((u, w), 0)
+        c_wt = d.cap.get((w, t), 0)
+        bound = min(c_uw, c_wt)
+        if bound == 0:
+            return 0
+        c_ut = d.cap.get((u, t), 0)
+        total, sinks = self.total, self.sinks
+
+        def ok(m: int) -> bool:
+            net.set_cap(u, w, c_uw - m)
+            net.set_cap(w, t, c_wt - m)
+            if u != t:
+                net.set_cap(u, t, c_ut + m)
+            return net.min_source_flow_at_least(sinks, total, warm=True)
+
+        try:
+            if ok(bound):
+                return bound
+            lo_ok, hi = 0, bound
+            while hi - lo_ok > 1:
+                mid = (lo_ok + hi) // 2
+                if ok(mid):
+                    lo_ok = mid
+                else:
+                    hi = mid
+            return lo_ok
+        finally:
+            net.set_cap(u, w, c_uw)
+            net.set_cap(w, t, c_wt)
+            if u != t:
+                net.set_cap(u, t, c_ut)
+
+    def discard_cap(self, t: int, w: int) -> int:
+        return self.split_cap(t, w, t)
+
+
 def max_split_capacity_rooted(d: DiGraph, demands: Dict[int, int],
                               u: int, w: int, t: int) -> int:
-    """Max M such that splitting (u,w),(w,t) by M keeps the rooted oracle.
-
-    Every cut's egress capacity is non-increasing in M under the split, so
-    feasibility is monotone and a binary search on the oracle is exact (the
-    closed form of Theorem 8 only covers the uniform all-roots case).  One
-    shared network serves the whole search: each probe rewrites the three
-    affected edge capacities in place."""
-    c_uw = d.cap.get((u, w), 0)
-    c_wt = d.cap.get((w, t), 0)
-    bound = min(c_uw, c_wt)
-    if bound == 0:
-        return 0
-    net = SourcedNetwork(d, dict(sorted(demands.items())))
-    c_ut = d.cap.get((u, t), 0)
-    total = sum(demands.values())
-    sinks = sorted(d.compute)
-
-    def ok(m: int) -> bool:
-        net.set_cap(u, w, c_uw - m)
-        net.set_cap(w, t, c_wt - m)
-        if u != t:
-            net.set_cap(u, t, c_ut + m)
-        return net.min_source_flow_at_least(sinks, total)
-
-    if ok(bound):
-        return bound
-    lo_ok, hi = 0, bound
-    while hi - lo_ok > 1:
-        mid = (lo_ok + hi) // 2
-        if ok(mid):
-            lo_ok = mid
-        else:
-            hi = mid
-    return lo_ok
+    """One-shot rooted maximum (fresh prober; Algorithm 1 keeps a shared
+    warm prober across its whole run instead)."""
+    return _RootedProber(d, demands).split_cap(u, w, t)
 
 
 def remove_switches_rooted(d: DiGraph, demands: Dict[int, int],
@@ -204,10 +357,7 @@ def remove_switches_rooted(d: DiGraph, demands: Dict[int, int],
     k = sum(demands.values())
     return _isolate_switches(
         d, k,
-        split_cap=lambda dd, u, w, t: max_split_capacity_rooted(
-            dd, demands, u, w, t),
-        discard_cap=lambda dd, t, w: max_split_capacity_rooted(
-            dd, demands, t, w, t),
+        prober_factory=lambda dd: _RootedProber(dd, demands),
         pair_priority=pair_priority, verify=verify,
         oracle=lambda dd: _oracle_holds_demands(dd, demands))
 
@@ -228,21 +378,23 @@ def remove_switches(d: DiGraph, k: int,
     validate_eulerian(d)
     return _isolate_switches(
         d, k,
-        split_cap=lambda dd, u, w, t: max_split_capacity(dd, k, u, w, t),
-        discard_cap=lambda dd, t, w: max_discard_capacity(dd, k, t, w),
+        prober_factory=lambda dd: _TheoremEightProber(dd, k),
         pair_priority=pair_priority, verify=verify,
         oracle=lambda dd: _oracle_holds(dd, k))
 
 
 def _isolate_switches(d: DiGraph, k: int,
-                      split_cap, discard_cap,
+                      prober_factory,
                       pair_priority: Optional[PairPriority],
                       verify: bool, oracle) -> SplitResult:
     """Shared Algorithm-1 saturation loop, parameterised by the maximum-
-    splittable-capacity oracles (Theorem-8 closed form for allgather,
-    binary search for the rooted variants)."""
+    splittable-capacity prober (Theorem-8 closed form for allgather,
+    warm binary search for the rooted variants).  One prober — and its
+    incremental oracle network — lives for the whole run; applied splits
+    are mirrored into it instead of triggering rebuilds."""
     original = d.copy()
     d = d.copy()
+    prober = prober_factory(d)
     routing: Dict[Edge, Dict[int, int]] = {}
 
     def apply_split(u: int, w: int, t: int, m: int) -> None:
@@ -254,6 +406,7 @@ def _isolate_switches(d: DiGraph, k: int,
             d.cap[(u, t)] = d.cap.get((u, t), 0) + m
             routing.setdefault((u, t), {})
             routing[(u, t)][w] = routing[(u, t)].get(w, 0) + m
+        prober.sync(((u, w), (w, t), (u, t)))
 
     for w in sorted(d.switches):
         # saturate every egress edge of w in turn
@@ -277,13 +430,13 @@ def _isolate_switches(d: DiGraph, k: int,
                 for u in ins:
                     if d.cap.get((w, t), 0) == 0:
                         break
-                    m = split_cap(d, u, w, t)
+                    m = prober.split_cap(u, w, t)
                     if m > 0:
                         apply_split(u, w, t, m)
                         progress = True
                 # degenerate leftover: (t,w),(w,t) must be discarded
                 if d.cap.get((w, t), 0) > 0 and d.cap.get((t, w), 0) > 0:
-                    m = discard_cap(d, t, w)
+                    m = prober.discard_cap(t, w)
                     if m > 0:
                         apply_split(t, w, t, m)
                         progress = True

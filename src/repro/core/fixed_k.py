@@ -16,6 +16,9 @@ from .optimality import simplest_between
 
 
 def _fixed_k_net(g: DiGraph, k: int) -> SourcedNetwork:
+    """One Theorem-14 oracle network per search; probes refloor every
+    capacity (no warm-startable delta — see `optimality._oracle_net`), but
+    the sink sweep adapts so infeasible probes fail on the first maxflow."""
     return SourcedNetwork(g, {u: k for u in sorted(g.compute)})
 
 

@@ -27,7 +27,12 @@ from .maxflow import SourcedNetwork
 
 def _oracle_net(g: DiGraph) -> SourcedNetwork:
     """The Theorem-1 D_k shape (super-source tied to every compute node),
-    built once per search and re-scaled per probe."""
+    built once per search and re-scaled per probe.  The sink sweep adapts
+    across probes (the network remembers the last failing sink and tries
+    it first), so the infeasible half of the binary search usually fails
+    after a single maxflow.  Flows stay cold per probe: a probe rescales
+    *every* capacity by a new numerator, so there is no small delta for
+    the warm-start engine to re-augment (unlike the §2.2 searches)."""
     return SourcedNetwork(g, {u: 0 for u in sorted(g.compute)})
 
 

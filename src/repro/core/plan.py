@@ -41,6 +41,7 @@ from .edge_split import (PairPriority, SplitResult, remove_switches,
                          remove_switches_rooted, trivial_split)
 from .fixed_k import solve_fixed_k
 from .graph import DiGraph, Edge, validate_eulerian
+from .maxflow import COUNTERS
 from .optimality import Optimality, solve_optimality
 from .schedule import (AllReduceSchedule, PipelineSchedule, Send,
                        _assign_paths, _build_allgather_rounds,
@@ -66,7 +67,12 @@ class PlanError(ValueError):
 
 @dataclasses.dataclass
 class StageStat:
-    """One pipeline stage's wall time plus small size/result stats."""
+    """One pipeline stage's wall time plus small size/result stats.
+
+    Stages that drive the maxflow oracle engine (solve/split/pack) also
+    record ``probes`` (maxflow invocations, including warm-start drains)
+    and ``augments`` (augmenting paths pushed) in `meta` — the counters
+    perf work watches to see oracle reuse paying off."""
     stage: str
     wall_time_s: float
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -213,6 +219,7 @@ def solve(plan: CollectivePlan) -> CollectivePlan:
     rooted kinds compute λ(root) = min_v F(root, v) (Appendix A eq. 5)."""
     _require(plan, "solve", "", "opt")
     t0 = time.perf_counter()
+    c0 = COUNTERS.snapshot()
     w = plan.work
     meta: Dict[str, Any] = {"nodes": w.num_nodes, "edges": len(w.cap)}
     if plan.is_rooted:
@@ -233,7 +240,8 @@ def solve(plan: CollectivePlan) -> CollectivePlan:
     return dataclasses.replace(
         plan, opt=opt, scaled=scaled,
         stats=plan.stats.with_stage("solve", wall, k=opt.k, U=str(opt.U),
-                                    inv_x_star=str(opt.inv_x_star), **meta))
+                                    inv_x_star=str(opt.inv_x_star), **meta,
+                                    **COUNTERS.delta(c0)))
 
 
 def adopt_solution(plan: CollectivePlan, opt: Optimality) -> CollectivePlan:
@@ -265,6 +273,7 @@ def split(plan: CollectivePlan) -> CollectivePlan:
     split when the topology is already direct-connect."""
     _require(plan, "split", "opt", "split")
     t0 = time.perf_counter()
+    c0 = COUNTERS.snapshot()
     g = plan.scaled
     switched = g.switches and any(w in e for e in g.cap for w in g.switches)
     if plan.is_rooted:
@@ -286,7 +295,7 @@ def split(plan: CollectivePlan) -> CollectivePlan:
         stats=plan.stats.with_stage(
             "split", wall, switches=len(g.switches),
             logical_edges=len(res.graph.cap),
-            routed_edges=len(res.routing)))
+            routed_edges=len(res.routing), **COUNTERS.delta(c0)))
 
 
 def pack(plan: CollectivePlan) -> CollectivePlan:
@@ -294,6 +303,7 @@ def pack(plan: CollectivePlan) -> CollectivePlan:
     k trees per root (allgather family) or λ trees at the single root."""
     _require(plan, "pack", "split", "classes")
     t0 = time.perf_counter()
+    c0 = COUNTERS.snapshot()
     if plan.is_rooted:
         demands = {plan.root: plan.opt.k}
         classes = pack_rooted_trees(plan.split.graph, demands)
@@ -305,7 +315,8 @@ def pack(plan: CollectivePlan) -> CollectivePlan:
     return dataclasses.replace(
         plan, classes=classes,
         stats=plan.stats.with_stage("pack", wall, classes=len(classes),
-                                    depth=max_tree_depth(classes)))
+                                    depth=max_tree_depth(classes),
+                                    **COUNTERS.delta(c0)))
 
 
 def rounds(plan: CollectivePlan) -> CollectivePlan:
@@ -371,7 +382,10 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
                    num_chunks: int = 8, root: Optional[int] = None,
                    fixed_k: Optional[int] = None,
                    pair_priority: Optional[PairPriority] = None,
-                   verify: bool = False) -> Dict[str, FamilyArtifact]:
+                   verify: bool = False,
+                   timings: Optional[Dict[str, float]] = None,
+                   packed_out: Optional[Dict[str, CollectivePlan]] = None
+                   ) -> Dict[str, FamilyArtifact]:
     """Compile several collectives for one topology, sharing stages.
 
     * The §2.1 solve runs once and is shared across both orientations
@@ -381,6 +395,16 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
       the `allgather` / `reduce_scatter` rows when requested together.
     * Rooted kinds (`broadcast`, `reduce`) need `root`; `fixed_k` applies
       to the allgather family only (rooted kinds always use k = λ(root)).
+    * A `timings` dict (if given) receives each kind's *marginal* wall
+      seconds — shared stage work is charged to the kind that triggered
+      it, so the values sum to the family's total compile wall time (this
+      is what the sweep records as per-row ``compile_time_s``).
+    * A `packed_out` dict (if given) receives the packed (pre-rounds)
+      plans by plan kind.  Stages 1-3 are chunk-count-independent, so a
+      caller that discovers it needs a larger P (the sweep's P >= depth
+      rule) can re-run only `rounds` + `emit` on a
+      ``dataclasses.replace(plan, num_chunks=...)`` copy instead of
+      recompiling the family.
 
     Returns {kind: artifact}, semantically identical (and byte-identical
     once serialized) to calling the per-kind `compile_*` entry points.
@@ -417,6 +441,7 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
 
     out: Dict[str, FamilyArtifact] = {}
     for kind in kinds:
+        t0 = time.perf_counter()
         if kind == "allreduce":
             # RS first, AG adopts its solve — same order as the monolith
             rs = emit(full_plan("reduce_scatter"))
@@ -424,4 +449,8 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
             out[kind] = AllReduceSchedule(rs=rs, ag=ag)
         else:
             out[kind] = emit(full_plan(kind))
+        if timings is not None:
+            timings[kind] = time.perf_counter() - t0
+    if packed_out is not None:
+        packed_out.update(packed)
     return out

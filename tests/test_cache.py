@@ -308,9 +308,15 @@ def test_checked_in_bench_is_current():
     for name in sweep_registry():
         for kind in ("broadcast", "reduce", "allreduce"):
             assert (name, kind) in seen
+    # the scaled-up rows are committed (and thus --measured-gateable)
+    from repro.cache import LARGE_NAMES
+    for name in LARGE_NAMES:
+        assert name in sweep_registry()
+        assert (name, "allgather") in seen
     for e in doc["entries"]:
         assert Fraction(e["achieved_over_claimed"]) == 1
         assert e["num_chunks"] >= e["depth"]
+        assert e["oracle_probes"] >= 0 and e["oracle_augments"] >= 0
 
 
 def test_cache_lru_eviction(tmp_path):

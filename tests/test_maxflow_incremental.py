@@ -1,0 +1,246 @@
+"""Warm-started incremental maxflow engine: flow-preserving capacity
+updates equal cold recomputation (exact values, not just verdicts) over
+randomized update sequences, adaptive sink ordering never changes oracle
+verdicts, the shared §2.2 probers match their one-shot forms, and the
+per-stage probe/augment counters ride the compile stats.
+
+(The byte-identity of every golden schedule through the explicit pipeline
+stages — the end-to-end guarantee that none of this changed any compiled
+artifact — is pinned by tests/test_plan.py.)"""
+import random
+
+import pytest
+
+from repro.core.edge_split import (_RootedProber, _TheoremEightProber,
+                                   max_discard_capacity, max_split_capacity,
+                                   max_split_capacity_rooted,
+                                   remove_switches)
+from repro.core.graph import DiGraph
+from repro.core.maxflow import COUNTERS, FlowNetwork, SourcedNetwork
+from repro.core import compile_allgather
+from repro.topo import fat_tree, fig1a, two_cluster_switch
+
+
+def _random_net(rng, n):
+    """A FlowNetwork over n+1 nodes (node n = super-source candidate) with
+    random edges; returns (net, edge_ids)."""
+    net = FlowNetwork(n)
+    eids = []
+    for _ in range(rng.randint(2 * n, 4 * n)):
+        u, v = rng.sample(range(n), 2)
+        eids.append(net.add_edge(u, v, rng.randint(0, 9)))
+    return net, eids
+
+
+def _clone_with_caps(net, caps):
+    """Fresh zero-flow network with the same edges at capacities `caps`
+    (one per forward edge id)."""
+    cold = FlowNetwork(net.n)
+    for j, c in enumerate(caps):
+        cold.add_edge(net.to[2 * j ^ 1], net.to[2 * j], c)
+    return cold
+
+
+# ---------------------------------------------------------------------- #
+# FlowNetwork: increase/decrease vs cold recomputation (exact values)
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(25))
+def test_incremental_cap_updates_match_cold_maxflow(seed):
+    """Maintain a maxflow across a random sequence of single-edge capacity
+    increases and decreases using only the flow-preserving primitives; the
+    maintained value must equal a cold from-scratch maxflow every step."""
+    rng = random.Random(seed)
+    n = rng.randint(4, 8)
+    net, eids = _random_net(rng, n)
+    s, t = 0, n - 1
+    caps = [net.cap[2 * j] for j in range(len(net.cap) // 2)]
+    value = net.maxflow(s, t)
+    for _ in range(15):
+        j = rng.randrange(len(eids))
+        new_cap = rng.randint(0, 9)
+        if new_cap >= caps[j]:
+            net.increase_edge_cap(2 * j, new_cap)
+        else:
+            value -= net.decrease_edge_cap(2 * j, new_cap, s, t)
+        caps[j] = new_cap
+        value += net.maxflow(s, t)      # augment only the delta
+        assert value == _clone_with_caps(net, caps).maxflow(s, t)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_incremental_updates_respect_limit_probes(seed):
+    """Same maintenance loop but with limit-probed (early-exit) flows, the
+    shape the §2.2 binary searches use: the maintained value clamped at
+    the limit must match the cold limit-probe."""
+    rng = random.Random(100 + seed)
+    n = rng.randint(4, 7)
+    net, eids = _random_net(rng, n)
+    s, t = 0, n - 1
+    limit = rng.randint(1, 12)
+    caps = [net.cap[2 * j] for j in range(len(net.cap) // 2)]
+    value = net.maxflow(s, t, limit=limit)
+    for _ in range(12):
+        j = rng.randrange(len(eids))
+        new_cap = rng.randint(0, 9)
+        if new_cap >= caps[j]:
+            net.increase_edge_cap(2 * j, new_cap)
+        else:
+            value -= net.decrease_edge_cap(2 * j, new_cap, s, t)
+        caps[j] = new_cap
+        if value < limit:
+            value += net.maxflow(s, t, limit=limit - value)
+        assert value == _clone_with_caps(net, caps).maxflow(s, t,
+                                                            limit=limit)
+
+
+# ---------------------------------------------------------------------- #
+# SourcedNetwork: warm sweeps == cold sweeps, any adaptive order
+# ---------------------------------------------------------------------- #
+
+def _random_sourced(rng, n):
+    edges = {}
+    for _ in range(rng.randint(n, 3 * n)):
+        u, v = rng.sample(range(n), 2)
+        edges[(u, v)] = rng.randint(1, 8)
+    g = DiGraph(n, frozenset(range(n)), edges, "rand")
+    return SourcedNetwork(g, {u: rng.randint(1, 5) for u in range(n)})
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_warm_sweep_matches_cold_over_random_update_sequences(seed):
+    """warm=True sweeps after arbitrary capacity rewrites give exactly the
+    cold-network verdict, probe after probe."""
+    rng = random.Random(seed)
+    n = rng.randint(3, 8)
+    warm_net = _random_sourced(rng, n)
+    eids = (list(warm_net.eid.values())
+            + list(warm_net.src_eid.values()))
+    threshold = rng.randint(1, 12)
+    sinks = list(range(n - 1))
+    for _ in range(12):
+        for _ in range(rng.randint(1, 3)):
+            warm_net.set_cap_id(rng.choice(eids), rng.randint(0, 10))
+        got = warm_net.min_source_flow_at_least(sinks, threshold, warm=True)
+        cold = _clone_with_caps(warm_net.net, warm_net._tgt)
+
+        def probe(v):
+            cold.reset_flow()
+            return cold.maxflow(warm_net.s, v, limit=threshold)
+
+        assert got == all(probe(v) >= threshold for v in sinks)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_adaptive_sink_order_never_changes_verdicts(seed):
+    """The same capacity state probed through different adaptive-order
+    histories (and explicitly shuffled sink arguments) always returns the
+    same verdict."""
+    rng = random.Random(200 + seed)
+    n = rng.randint(3, 7)
+    net_a = _random_sourced(rng, n)
+    sinks = list(range(n - 1))
+    threshold = rng.randint(1, 10)
+    # seed net_a's adaptive order with a random probe history
+    for _ in range(3):
+        net_a.min_source_flow_at_least(
+            rng.sample(sinks, len(sinks)), rng.randint(1, 10))
+    fresh = SourcedNetwork(net_a.g, {u: 0 for u in range(n)})
+    for u, eid in net_a.src_eid.items():
+        fresh.set_cap_id(fresh.src_eid[u], net_a._tgt[eid >> 1])
+    shuffled = rng.sample(sinks, len(sinks))
+    want = fresh.min_source_flow_at_least(sinks, threshold)
+    assert net_a.min_source_flow_at_least(sinks, threshold) == want
+    assert net_a.min_source_flow_at_least(shuffled, threshold) == want
+    assert net_a.min_source_flow_at_least(sinks, threshold,
+                                          warm=True) == want
+
+
+# ---------------------------------------------------------------------- #
+# §2.2 probers: shared incremental networks == one-shot oracles
+# ---------------------------------------------------------------------- #
+
+def _random_eulerian(seed, n_compute=4, n_switch=2):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    n = n_compute + n_switch
+    edges = {}
+    cycles = [list(range(n))]
+    for _ in range(int(rng.integers(2, 5))):
+        k = int(rng.integers(2, n + 1))
+        cycles.append(list(rng.choice(n, size=k, replace=False)))
+    for cyc in cycles:
+        cap = int(rng.integers(1, 5))
+        for i in range(len(cyc)):
+            u, v = int(cyc[i]), int(cyc[(i + 1) % len(cyc)])
+            if u != v:
+                edges[(u, v)] = edges.get((u, v), 0) + cap
+    return DiGraph(n, frozenset(range(n_compute)), edges, f"rand{seed}")
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_shared_prober_matches_one_shot_oracles(seed):
+    """A single `_TheoremEightProber` answering many (u, w, t) queries in
+    sequence returns exactly what fresh one-shot oracles return — the
+    adaptive ordering and in-place gadget toggles leak no state between
+    queries."""
+    d = _random_eulerian(seed)
+    k = 2
+    shared = _TheoremEightProber(d, k)
+    switches = sorted(d.switches)
+    queries = []
+    for w in switches:
+        ins = sorted(a for (a, b) in d.cap if b == w)
+        outs = sorted(b for (a, b) in d.cap if a == w)
+        queries += [(u, w, t) for u in ins for t in outs if u != t][:4]
+    for (u, w, t) in queries:
+        assert shared.split_cap(u, w, t) == max_split_capacity(d, k, u, w, t)
+    for w in switches:
+        for t in sorted(b for (a, b) in d.cap if a == w)[:2]:
+            if d.cap.get((t, w), 0):
+                assert shared.discard_cap(t, w) == \
+                    max_discard_capacity(d, k, t, w)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_shared_rooted_prober_matches_one_shot(seed):
+    d = _random_eulerian(seed + 50, n_compute=5, n_switch=1)
+    demands = {0: 2, 1: 1}
+    shared = _RootedProber(d, demands)
+    w = min(d.switches)
+    ins = sorted(a for (a, b) in d.cap if b == w)
+    outs = sorted(b for (a, b) in d.cap if a == w)
+    for u in ins[:3]:
+        for t in outs[:3]:
+            assert shared.split_cap(u, w, t) == \
+                max_split_capacity_rooted(d, demands, u, w, t)
+
+
+def test_remove_switches_verifies_on_switched_zoo():
+    """End-to-end Algorithm 1 with the shared probers keeps the packing
+    oracle on real multi-switch fabrics (verify=True re-checks Theorem 5
+    on the split result)."""
+    for g, k in [(fig1a(), 1), (two_cluster_switch(3, 6, 2), 1),
+                 (fat_tree(4, 2, 2), 2)]:
+        from repro.core.optimality import solve_optimality
+        opt = solve_optimality(g)
+        res = remove_switches(g.scaled(opt.U), opt.k, verify=True)
+        assert not any(w in e for e in res.graph.cap
+                       for w in res.graph.switches)
+
+
+# ---------------------------------------------------------------------- #
+# instrumentation
+# ---------------------------------------------------------------------- #
+
+def test_stage_meta_carries_probe_and_augment_counters():
+    sched = compile_allgather(fig1a(), num_chunks=8)
+    by_stage = {s.stage: s.meta for s in sched.compile_stats.stages}
+    for stage in ("solve", "split", "pack"):
+        assert by_stage[stage]["probes"] > 0
+        assert by_stage[stage]["augments"] > 0
+    # the global counters are monotone and cheap to snapshot
+    snap = COUNTERS.snapshot()
+    compile_allgather(fig1a(), num_chunks=4)
+    delta = COUNTERS.delta(snap)
+    assert delta["probes"] > 0 and delta["augments"] > 0

@@ -1,14 +1,17 @@
 #!/usr/bin/env python
-"""Perf-smoke gate: fail if the smoke sweep's total compile time regressed
-more than --factor (default 1.25x, i.e. >25%) vs the committed
-`BENCH_schedules.json` baseline.
+"""Perf-smoke gate: fail if schedule-compile time regressed more than
+--factor (default 1.25x, i.e. >25%) vs the committed
+`BENCH_schedules.json` baseline — in *total* or in the §2.2 split / §2.3
+pack stages individually (`compile_stats` per-stage seconds), so a
+regression hiding inside one stage while another improves still fails.
 
-The baseline is the sum of `compile_time_s` over the committed entries for
-the smoke topologies (all collectives); the measurement is either a
-freshly-run smoke sweep (default) or an already-emitted sweep document
-passed with --measured (CI reuses the smoke sweep it just ran).  Per-stage
-`compile_stats` of the worst offenders are printed on failure so the
-regression points at a stage, not just a number.
+The gate runs over every (topology, kind) pair shared by the measured and
+baseline documents: the default fresh measurement compiles the smoke
+topologies plus one scaled-up fabric (`PERF_GATE_NAMES`), and passing a
+full sweep document with --measured gates every row it shares with the
+baseline — including the large-topology rows.  Per-stage `compile_stats`
+of the worst offenders are printed on failure so the regression points at
+a stage, not just a number.
 
     python tools/perf_smoke.py                       # run + compare
     python tools/perf_smoke.py --measured /tmp/BENCH_smoke.json
@@ -23,6 +26,20 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 
+#: stages gated individually (the two §2.2/§2.3 hot paths); stages whose
+#: baseline share is below ABS_FLOOR seconds are not gated individually —
+#: a ratio over a near-zero baseline is all timer noise.
+GATED_STAGES = ("split", "pack")
+ABS_FLOOR = 0.05
+
+
+def gate_names():
+    """Topologies the default fresh measurement compiles: the smoke rows
+    plus one scaled-up fabric (`repro.cache.PERF_GATE_NAMES`) so the
+    large-row hot paths are exercised by the gate too."""
+    from repro.cache import PERF_GATE_NAMES
+    return tuple(PERF_GATE_NAMES)
+
 
 def total_compile_time(doc: dict, pairs) -> float:
     """Sum compile_time_s over the given (name, kind) pairs — both sides
@@ -32,46 +49,69 @@ def total_compile_time(doc: dict, pairs) -> float:
                if (e["name"], e["kind"]) in pairs)
 
 
+def stage_total(doc: dict, pairs, stage: str) -> float:
+    """Sum one stage's seconds over the given pairs (rows without
+    instrumentation contribute 0)."""
+    return sum((e.get("compile_stats") or {}).get(stage, 0.0)
+               for e in doc["entries"] if (e["name"], e["kind"]) in pairs)
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=str(REPO / "BENCH_schedules.json"),
                     help="committed sweep scoreboard to compare against")
     ap.add_argument("--measured", default=None,
-                    help="an already-emitted sweep JSON; omitted = run the "
-                         "smoke sweep now (jobs=1 for stable timing)")
+                    help="an already-emitted sweep JSON; omitted = sweep "
+                         "the gate topologies now (jobs=1 for stable "
+                         "timing)")
     ap.add_argument("--factor", type=float, default=1.25,
-                    help="fail when measured > factor * baseline")
+                    help="fail when measured > factor * baseline (total "
+                         "and per gated stage)")
     return ap
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
-    from repro.cache import SMOKE_NAMES, run_sweep
+    from repro.cache import run_sweep
 
     baseline_doc = json.loads(Path(args.baseline).read_text())
     if args.measured:
         measured_doc = json.loads(Path(args.measured).read_text())
     else:
-        measured_doc = run_sweep(names=SMOKE_NAMES, jobs=1)
+        measured_doc = run_sweep(names=gate_names(), jobs=1)
 
     base_pairs = {(e["name"], e["kind"]) for e in baseline_doc["entries"]}
-    pairs = {(e["name"], e["kind"]) for e in measured_doc["entries"]
-             if e["name"] in SMOKE_NAMES} & base_pairs
+    pairs = {(e["name"], e["kind"])
+             for e in measured_doc["entries"]} & base_pairs
     if not pairs:
-        print("perf-smoke: measured document shares no smoke (name, kind) "
+        print("perf-smoke: measured document shares no (name, kind) "
               "pairs with the baseline", file=sys.stderr)
         return 2
-    baseline = total_compile_time(baseline_doc, pairs)
-    measured = total_compile_time(measured_doc, pairs)
-    budget = args.factor * baseline
-    verdict = "OK" if measured <= budget else "FAIL"
-    print(f"perf-smoke[{verdict}]: measured {measured:.3f}s vs baseline "
-          f"{baseline:.3f}s over {len(pairs)} (topology, kind) pairs "
-          f"{sorted({n for n, _ in pairs})} "
-          f"(budget {budget:.3f}s = {args.factor:.2f}x)")
-    if measured <= budget:
+
+    failed = []
+    checks = [("total", total_compile_time(baseline_doc, pairs),
+               total_compile_time(measured_doc, pairs))]
+    for stage in GATED_STAGES:
+        base = stage_total(baseline_doc, pairs, stage)
+        if base < ABS_FLOOR:
+            continue
+        checks.append((f"stage:{stage}", base,
+                       stage_total(measured_doc, pairs, stage)))
+    for label, base, measured in checks:
+        budget = args.factor * base
+        ok = measured <= budget
+        if not ok:
+            failed.append(label)
+        print(f"perf-smoke[{label}][{'OK' if ok else 'FAIL'}]: "
+              f"measured {measured:.3f}s vs baseline {base:.3f}s "
+              f"(budget {budget:.3f}s = {args.factor:.2f}x)")
+    print(f"perf-smoke: {len(pairs)} (topology, kind) pairs over "
+          f"{sorted({n for n, _ in pairs})}")
+    if not failed:
         return 0
-    worst = sorted(measured_doc["entries"], key=lambda e: -e["compile_time_s"])
+    worst = sorted((e for e in measured_doc["entries"]
+                    if (e["name"], e["kind"]) in pairs),
+                   key=lambda e: -e["compile_time_s"])
     for e in worst[:5]:
         print(f"  {e['name']}.{e['kind']}: {e['compile_time_s']:.3f}s "
               f"stages={e.get('compile_stats')}", file=sys.stderr)
