@@ -30,15 +30,16 @@ from fractions import Fraction
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (allgather_inv_xstar, compile_allgather,
-                        compile_allreduce, compile_broadcast, compile_reduce,
-                        re_bc_allreduce_runtime, rs_ag_allreduce_runtime,
-                        simulate_allgather, simulate_allreduce,
-                        simulate_broadcast, simulate_reduce,
-                        solve_optimality)
-from repro.topo import (bidir_ring, dgx_box, dragonfly, fat_tree, fig1a,
-                        fig1d_ring_unwound, multipod_topology, ring,
-                        star_switch, torus_2d, two_cluster_switch)
+from repro.api import Collectives
+from repro.core import (allgather_inv_xstar, re_bc_allreduce_runtime,
+                        rs_ag_allreduce_runtime, simulate_allgather,
+                        simulate_allreduce, simulate_broadcast,
+                        simulate_reduce, solve_optimality)
+from repro.topo import resolve_topology
+
+#: one uncached facade for the whole battery — every schedule the
+#: benchmarks compile goes through the repo's single front door
+COLL = Collectives()
 
 
 def row(name: str, us: float, derived: str) -> None:
@@ -58,28 +59,27 @@ def timed(fn, *args, repeat=1, **kw):
 def fig1_optimality() -> None:
     """Paper Fig 1/2: edge splitting preserves the cluster cut; ring
     unwinding loses 4x."""
-    g = fig1a()
+    g = resolve_topology("fig1a")
     opt, us = timed(solve_optimality, g)
-    ring_inv = allgather_inv_xstar(fig1d_ring_unwound())
+    ring_inv = allgather_inv_xstar(resolve_topology("fig1d"))
     row("fig1_optimality.ours", us, f"inv_x*={opt.inv_x_star}")
     row("fig1_optimality.ring_unwound", us,
         f"inv_x*={ring_inv};slowdown={ring_inv / opt.inv_x_star}x")
 
 
 def pipeline_convergence() -> None:
-    g = fig1a()
     for p in (1, 2, 4, 8, 16, 32, 64, 128):
-        sched, us = timed(compile_allgather, g, num_chunks=p)
+        sched, us = timed(COLL.schedule, "fig1a", num_chunks=p)
         rep = simulate_allgather(sched)
         row(f"pipeline_convergence.P{p}", us, f"ratio={float(rep.ratio):.4f}")
 
 
 def zoo_optimality() -> None:
-    zoo = [fig1a(), ring(8), bidir_ring(8), torus_2d(4, 4), fat_tree(),
-           dragonfly(), dgx_box(), star_switch(8),
-           multipod_topology(2, 4, 10, 1)]
-    for g in zoo:
-        sched, us = timed(compile_allgather, g, num_chunks=32)
+    zoo = ("fig1a", "ring:8", "bring:8", "torus2d:4x4", "fattree",
+           "dragonfly", "dgx:8", "star:8", "multipod:2x4")
+    for spec in zoo:
+        g = resolve_topology(spec)
+        sched, us = timed(COLL.schedule, g, num_chunks=32)
         rep = simulate_allgather(sched)
         row(f"zoo_optimality.{g.name}", us,
             f"inv_x*={sched.opt.inv_x_star};k={sched.opt.k};"
@@ -87,10 +87,11 @@ def zoo_optimality() -> None:
 
 
 def allreduce_rs_ag() -> None:
-    for g in (fig1a(), ring(6), dragonfly(), dgx_box()):
+    for spec in ("fig1a", "ring:6", "dragonfly", "dgx:8"):
+        g = resolve_topology(spec)
         (rs_ag, us) = timed(rs_ag_allreduce_runtime, g)
         re_bc = re_bc_allreduce_runtime(g)
-        ar = compile_allreduce(g, num_chunks=32)
+        ar = COLL.schedule(g, kind="allreduce", num_chunks=32)
         rep = simulate_allreduce(ar)
         row(f"allreduce.{g.name}", us,
             f"rs_ag={rs_ag};re_bc={re_bc};"
@@ -101,11 +102,12 @@ def allreduce_rs_ag() -> None:
 def broadcast_reduce_family() -> None:
     """Appendix A + dual: single-root broadcast/reduce across topologies,
     converging to the eq (5) bound M/λ(root)."""
-    for g in (fig1a(), bidir_ring(8), dragonfly(), star_switch(8)):
-        root = min(g.compute)
-        bc, us = timed(compile_broadcast, g, root, num_chunks=32)
+    for spec in ("fig1a", "bring:8", "dragonfly", "star:8"):
+        g = resolve_topology(spec)
+        bc, us = timed(COLL.schedule, g, kind="broadcast", num_chunks=32)
         rep_bc = simulate_broadcast(bc)
-        rep_red = simulate_reduce(compile_reduce(g, root, num_chunks=32))
+        rep_red = simulate_reduce(
+            COLL.schedule(g, kind="reduce", num_chunks=32))
         row(f"broadcast_reduce.{g.name}", us,
             f"lambda={bc.k};bc_ratio={float(rep_bc.ratio):.4f};"
             f"red_ratio={float(rep_red.ratio):.4f}")
@@ -115,28 +117,37 @@ def schedule_gen_scaling() -> None:
     """§3: runtime vs topology size (strongly polynomial — and capacity-
     independent: scaling all bandwidths 100x must not change the time)."""
     for n in (4, 8, 16, 24):
-        g = bidir_ring(n)
-        _, us = timed(compile_allgather, g, num_chunks=8)
+        _, us = timed(COLL.schedule, f"bring:{n}", num_chunks=8)
         row(f"schedule_gen.bidir_ring{n}", us, f"nodes={n}")
     for n in (4, 8, 12):
-        g = two_cluster_switch(n // 2, 10, 1)
-        _, us = timed(compile_allgather, g, num_chunks=8)
+        _, us = timed(COLL.schedule, f"two_cluster:{n // 2},10,1",
+                      num_chunks=8)
         row(f"schedule_gen.two_cluster{n}", us, f"nodes={n}+3sw")
-    g1 = two_cluster_switch(4, 10, 1)
-    g100 = two_cluster_switch(4, 1000, 100)
-    _, us1 = timed(compile_allgather, g1, num_chunks=8)
-    _, us100 = timed(compile_allgather, g100, num_chunks=8)
+    _, us1 = timed(COLL.schedule, "two_cluster:4,10,1", num_chunks=8)
+    _, us100 = timed(COLL.schedule, "two_cluster:4,1000,100", num_chunks=8)
     row("schedule_gen.capacity_independence", us100,
         f"t(100x_bandwidth)/t(1x)={us100 / max(us1, 1):.2f}")
 
 
 def schedule_sweep(out_path: str, smoke: bool = False,
-                   cache_dir: str | None = None) -> None:
-    """Parallel zoo sweep; every entry must reproduce its claimed runtime."""
-    from repro.cache import SMOKE_NAMES, claim_mismatches, run_sweep
-    names = list(SMOKE_NAMES) if smoke else None
+                   cache_dir: str | None = None,
+                   topologies: list[str] | None = None,
+                   full: bool = False) -> None:
+    """Parallel zoo sweep; every entry must reproduce its claimed runtime.
+    `topologies` specs ride alongside the selected zoo rows (the smoke set
+    under --smoke, the whole zoo under --sweep/the full battery), or alone
+    when only --topology was given."""
+    from repro.cache import (SMOKE_NAMES, claim_mismatches, run_sweep,
+                             sweep_registry)
+    if smoke:
+        names = list(SMOKE_NAMES)
+    elif full and topologies:
+        names = list(sweep_registry())   # whole zoo + the extra specs
+    else:
+        names = None                     # run_sweep: zoo, or specs alone
     t0 = time.perf_counter()
-    doc = run_sweep(names=names, cache_dir=cache_dir, out_path=out_path)
+    doc = run_sweep(names=names, cache_dir=cache_dir, out_path=out_path,
+                    topologies=topologies)
     us = (time.perf_counter() - t0) * 1e6
     for e in doc["entries"]:
         row(f"schedule_sweep.{e['name']}", e["compile_time_s"] * 1e6,
@@ -162,15 +173,12 @@ def jax_collectives() -> None:
         except ImportError:
             from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
-        from repro.topo import bidir_ring
-        from repro.core.schedule import compile_allgather, \\
-            compile_reduce_scatter
-        from repro.comms import compile_program, tree_all_reduce
+        from repro.api import Collectives
+        from repro.comms import tree_all_reduce
 
         mesh = Mesh(np.array(jax.devices()), ('x',))
-        topo = bidir_ring(8)
-        ag = compile_program(compile_allgather(topo, num_chunks=4))
-        rs = compile_program(compile_reduce_scatter(topo, num_chunks=4))
+        coll = Collectives(num_chunks=4)
+        rs, ag = coll.program('bring:8', kind='allreduce')
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 1 << 16))
 
         tree = jax.jit(shard_map(
@@ -215,6 +223,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "committed full-sweep scoreboard is never clobbered)")
     ap.add_argument("--cache-dir", default=None,
                     help="schedule artifact cache dir for the sweep")
+    ap.add_argument("--topology", nargs="*", default=None, metavar="SPEC",
+                    help="sweep these extra TopologySpec strings (full "
+                         "grammar incl. transforms): alongside the selected "
+                         "zoo rows under --smoke/--sweep, or alone when "
+                         "given by themselves — arbitrary non-zoo fabrics "
+                         "without a code edit")
     return ap
 
 
@@ -222,11 +236,13 @@ def main(argv: list[str] | None = None) -> None:
     args = build_parser().parse_args(argv)
     if args.out is None:
         from repro.cache import default_out_path
-        args.out = default_out_path(partial=args.smoke)
+        args.out = default_out_path(
+            partial=args.smoke or args.topology is not None)
 
     print("name,us_per_call,derived")
-    if args.smoke or args.sweep:
-        schedule_sweep(args.out, smoke=args.smoke, cache_dir=args.cache_dir)
+    if args.smoke or args.sweep or args.topology is not None:
+        schedule_sweep(args.out, smoke=args.smoke, cache_dir=args.cache_dir,
+                       topologies=args.topology, full=args.sweep)
         return
     fig1_optimality()
     pipeline_convergence()

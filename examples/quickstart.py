@@ -1,36 +1,36 @@
 """Quickstart: compile a bandwidth-optimal collective schedule for a switch
-topology, inspect it, verify it, and execute it on real (host) devices.
+topology, inspect it, verify it, and execute it on real (host) devices —
+all through the repo's two front doors: `repro.topo.spec.TopologySpec`
+(declarative topologies) and `repro.api.Collectives` (schedules).
 
     PYTHONPATH=src python examples/quickstart.py
+    # or, after `pip install -e .`, plain `python examples/quickstart.py`
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from fractions import Fraction
-
-from repro.core import (compile_allgather, simulate_allgather,
-                        solve_optimality)
-from repro.topo import fig1a, fig1d_ring_unwound
+from repro.api import Collectives
+from repro.core import simulate_allgather, solve_optimality
 from repro.core.optimality import allgather_inv_xstar
+from repro.topo import TopologySpec, resolve_topology
 
 
 def main() -> None:
     # 1. the paper's Figure 1a topology: 8 compute nodes, 2 clusters,
-    #    3 switches; thick links have 10x bandwidth.
-    g = fig1a()
+    #    3 switches; thick links have 10x bandwidth.  One spec string
+    #    (a zoo name here; "two_cluster:4,10,1" builds the same graph).
+    g = resolve_topology("fig1a")
     print(g.describe())
 
     # 2. §2.1: exact optimal bandwidth runtime via maxflow binary search
     opt = solve_optimality(g)
     print(f"\noptimal T_B = (M/N) * {opt.inv_x_star}   (U={opt.U}, k={opt.k})")
-    ring = allgather_inv_xstar(fig1d_ring_unwound())
+    ring = allgather_inv_xstar(resolve_topology("fig1d"))
     print(f"TACCL/TACOS-style ring unwinding would give (M/N) * {ring} "
           f"-> {ring / opt.inv_x_star}x worse")
 
-    # 3. §2.2+2.3: edge splitting + arborescence packing + pipelining
-    sched = compile_allgather(g, num_chunks=64, verify=True)
+    # 3. §2.2+2.3: edge splitting + arborescence packing + pipelining,
+    #    through the Collectives facade (pass cache="DIR" to make every
+    #    later run replay the artifact instead of compiling)
+    coll = Collectives()
+    sched = coll.schedule(g, kind="allgather", num_chunks=64, verify=True)
     print(f"\nschedule: {sched.describe()}")
 
     # 4. verify + simulate on the physical topology
@@ -38,6 +38,11 @@ def main() -> None:
     print(f"simulated: {rep.describe()}")
     assert rep.ratio < 1.05, "should be within 5% of optimal at P=64"
     print("\nOK: schedule is provably correct and bandwidth-optimal.")
+
+    # 5. declarative what-if: degrade a DCN link, recompile, compare
+    degraded = TopologySpec.parse("two_cluster:4,10,2@degrade(0-8,cap=1)")
+    print(f"\nwhat-if {degraded}: "
+          f"inv_x*={coll.schedule(degraded, num_chunks=64).opt.inv_x_star}")
 
 
 if __name__ == "__main__":

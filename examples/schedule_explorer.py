@@ -1,47 +1,40 @@
-"""Explore the schedule compiler on any zoo topology: optimality search,
-edge splitting, tree packing, chunked pipelining, physical-link loads.
+"""Explore the schedule compiler on any topology: optimality search, edge
+splitting, tree packing, chunked pipelining, physical-link loads.
+
+``--topo`` takes a committed zoo row name OR any `TopologySpec` string
+(full grammar, transforms included) — no code edit needed for new fabrics:
 
     PYTHONPATH=src python examples/schedule_explorer.py --topo dragonfly
+    PYTHONPATH=src python examples/schedule_explorer.py \
+        --topo "torus2d:6x6@fail(0-1)"
     PYTHONPATH=src python examples/schedule_explorer.py --topo hypercube3 \
         --cache /tmp/schedules   # second run replays the artifact
 """
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from repro.core import (compile_allgather, compile_allreduce,
-                        simulate_allgather, simulate_allreduce,
+from repro.api import Collectives
+from repro.core import (simulate_allgather, simulate_allreduce,
                         rs_ag_allreduce_runtime, re_bc_allreduce_runtime)
-from repro import topo
-from repro.cache import ScheduleCache, sweep_registry
-
-# every sweep topology (hypercube/BCube/mesh-of-DGX/degraded included)
-# plus a couple of explorer-only aliases
-TOPOS = dict(sweep_registry())
-TOPOS.update({
-    "fat_tree": topo.fat_tree,
-    "dgx": topo.dgx_box,
-})
+from repro.topo import resolve_topology, zoo_specs
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--topo", default="fig1a", choices=sorted(TOPOS))
+    ap.add_argument("--topo", default="fig1a",
+                    help="zoo row name or TopologySpec string "
+                         f"(zoo: {', '.join(sorted(zoo_specs()))})")
     ap.add_argument("--chunks", type=int, default=32)
     ap.add_argument("--cache", default="",
                     help="schedule artifact cache dir (skip recompilation)")
     args = ap.parse_args()
 
-    g = TOPOS[args.topo]()
+    g = resolve_topology(args.topo)
     print(g.describe())
-    if args.cache:
-        cache = ScheduleCache(args.cache, verify_on_compile=True)
-        sched = cache.allgather(g, num_chunks=args.chunks)
-        print(cache.describe())
-    else:
-        sched = compile_allgather(g, num_chunks=args.chunks, verify=True)
+    coll = Collectives(cache=args.cache or None, num_chunks=args.chunks,
+                       verify=True)
+    sched = coll.schedule(g, kind="allgather")
+    if coll.cache is not None:
+        print(coll.cache.describe())
     print(f"\nallgather: {sched.describe()}")
     print(f"tree classes: {len(sched.classes)}  "
           f"(depths <= {sched.depth})")
@@ -53,7 +46,7 @@ def main() -> None:
         print(f"  {u:3d} -> {v:3d}: {float(b):.4f}")
     print(f"\nallreduce RS+AG factor: {rs_ag_allreduce_runtime(g)} "
           f"vs RE+BC {re_bc_allreduce_runtime(g)}")
-    ar = simulate_allreduce(compile_allreduce(g, num_chunks=args.chunks))
+    ar = simulate_allreduce(coll.schedule(g, kind="allreduce"))
     print(f"allreduce achieved: {ar.describe()}")
 
 

@@ -2,12 +2,9 @@
 stream of requests (greedy decoding, ring-buffer KV cache for SWA archs).
 
     PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
+    # or, after `pip install -e .`, plain `python examples/serve_lm.py`
 """
 import argparse
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import numpy as np

@@ -3,12 +3,10 @@ few hundred steps on CPU with the full production stack — synthetic data
 pipeline, AdamW, checkpointing, fault-tolerant supervisor.
 
     PYTHONPATH=src python examples/train_lm.py --arch qwen3-8b --steps 200
+    # or, after `pip install -e .`, plain `python examples/train_lm.py`
 """
 import argparse
 import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp

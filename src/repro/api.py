@@ -1,0 +1,265 @@
+"""The one front door: `Collectives` over the compiler / cache / comms stack.
+
+Every way of getting a schedule, a lowered `ppermute` program, or an
+executable collective out of this repo goes through one facade::
+
+    from repro.api import Collectives
+
+    coll = Collectives(cache="/tmp/schedules")        # or cache=None
+    sched = coll.schedule("torus2d:8x8", kind="allgather", num_chunks=16)
+    fam   = coll.family("fig1a", kinds=("allgather", "reduce_scatter"))
+    prog  = coll.program("dragonfly:g6,p4", kind="broadcast", root=0)
+    fn    = coll.executable("bring:8", kind="allreduce", axis_name="x")
+
+Topology arguments accept a `DiGraph`, a `repro.topo.spec.TopologySpec`, a
+committed zoo row name (``"torus8x8_failed"``), or a raw spec string
+(``"torus2d:8x8@fail(0-1)"``) — see `repro.topo.spec.resolve_topology`.
+Compile knobs travel as a `CompileOptions` (or per-call keyword overrides of
+the facade's defaults); with a cache attached, every method is replay-first
+(`repro.cache.ScheduleCache` hit path) and misses compile through the staged
+`repro.core.plan` pipeline, sharing solve/split/pack across a family.
+
+The older module-level acquisition helpers
+(`repro.comms.schedules_for_topology` / `programs_for_topology`) are thin
+shims over this facade that raise `ReproDeprecationWarning`; tier-1 promotes
+that warning to an error, so no in-repo caller can quietly regress onto
+them.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+from repro.core import plan as plan_mod
+from repro.core import schedule as schedule_mod
+from repro.core.graph import DiGraph
+from repro.core.schedule import AllReduceSchedule, PipelineSchedule
+from repro.topo.spec import SpecLike, TopologySpec, resolve_topology
+
+Artifact = Union[PipelineSchedule, AllReduceSchedule]
+
+#: collective kinds the facade (and the whole stack) understands
+KINDS = ("allgather", "reduce_scatter", "broadcast", "reduce", "allreduce")
+ROOTED_KINDS = ("broadcast", "reduce")
+#: the default `family()` pair — what an allreduce consumer needs
+PAIR_KINDS = ("allgather", "reduce_scatter")
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """Deprecated repro entry point.  Tier-1 runs with this promoted to an
+    error (`pyproject.toml` filterwarnings), so in-repo callers must route
+    through `repro.api.Collectives` / `repro.topo.spec.TopologySpec`."""
+
+
+def warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} instead",
+                  ReproDeprecationWarning, stacklevel=stacklevel)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Declarative compile request: everything a schedule acquisition needs
+    besides the topology itself.
+
+    ``root=None`` on a rooted kind defaults to the smallest compute node at
+    resolve time (the sweep's convention), so ``broadcast`` works out of the
+    box; ``verify`` replays every chunk at compile time (fresh compiles
+    only — a cache constructed by the facade inherits it as
+    ``verify_on_compile``)."""
+    kind: str = "allgather"
+    root: Optional[int] = None
+    num_chunks: int = 8
+    fixed_k: Optional[int] = None
+    verify: bool = False
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown collective kind {self.kind!r} "
+                             f"(one of {KINDS})")
+        if self.kind in ROOTED_KINDS and self.fixed_k is not None:
+            raise ValueError(f"{self.kind} has no fixed-k variant "
+                             f"(k = λ(root))")
+
+    def replace(self, **overrides: Any) -> "CompileOptions":
+        return dataclasses.replace(self, **overrides)
+
+    def resolved_root(self, g: DiGraph) -> Optional[int]:
+        if self.kind not in ROOTED_KINDS:
+            return None
+        return self.root if self.root is not None else min(g.compute)
+
+
+class Collectives:
+    """Facade owning the schedule cache and the staged compiler pipeline.
+
+    ``cache`` is ``None`` (always compile), a directory path (an on-disk
+    `repro.cache.ScheduleCache` is created there, inheriting ``verify`` as
+    its compile-time verification flag), or a ready `ScheduleCache`.
+    Remaining keywords set the default `CompileOptions` that per-call
+    keywords override."""
+
+    def __init__(self, cache: Any = None, *,
+                 options: Optional[CompileOptions] = None,
+                 **defaults: Any):
+        if options is not None and defaults:
+            raise TypeError("pass either options= or default keywords, "
+                            "not both")
+        self.options = options if options is not None \
+            else CompileOptions(**defaults)
+        self.cache = self._resolve_cache(cache, self.options.verify)
+
+    @staticmethod
+    def _resolve_cache(cache: Any, verify: bool):
+        if cache is None or cache == "":
+            return None
+        if isinstance(cache, (str, bytes)) or hasattr(cache, "__fspath__"):
+            from repro.cache.store import ScheduleCache
+            return ScheduleCache(cache, verify_on_compile=verify)
+        return cache        # a ready ScheduleCache (or test double)
+
+    # -------------------------------------------------------------- #
+    # request plumbing
+    # -------------------------------------------------------------- #
+
+    def topology(self, topo: SpecLike) -> DiGraph:
+        """Resolve any accepted topology form to a `DiGraph`."""
+        return resolve_topology(topo)
+
+    def opts(self, opts: Optional[CompileOptions] = None,
+             **overrides: Any) -> CompileOptions:
+        """Merge per-call overrides onto the facade defaults."""
+        base = opts if opts is not None else self.options
+        return base.replace(**overrides) if overrides else base
+
+    @contextlib.contextmanager
+    def _verify_on_compile(self, verify: bool):
+        """Honor a per-call ``verify=True`` on the cache's miss path
+        (cache hits replay an already-verified artifact and are never
+        re-verified).  Raising the flag only — a cache constructed with
+        ``verify=True`` keeps verifying even for ``verify=False`` calls."""
+        cache = self.cache
+        if not verify or getattr(cache, "verify_on_compile", False):
+            yield
+            return
+        cache.verify_on_compile = True
+        try:
+            yield
+        finally:
+            cache.verify_on_compile = False
+
+    # -------------------------------------------------------------- #
+    # schedules
+    # -------------------------------------------------------------- #
+
+    def schedule(self, topo: SpecLike,
+                 opts: Optional[CompileOptions] = None,
+                 **overrides: Any) -> Artifact:
+        """One compiled artifact (`PipelineSchedule`, or
+        `AllReduceSchedule` for ``kind="allreduce"``), cache-first."""
+        g = self.topology(topo)
+        o = self.opts(opts, **overrides)
+        root = o.resolved_root(g)
+        if self.cache is not None:
+            with self._verify_on_compile(o.verify):
+                if o.kind in ROOTED_KINDS:
+                    return getattr(self.cache, o.kind)(
+                        g, root=root, num_chunks=o.num_chunks)
+                return getattr(self.cache, o.kind)(
+                    g, num_chunks=o.num_chunks, fixed_k=o.fixed_k)
+        if o.kind in ROOTED_KINDS:
+            return getattr(schedule_mod, f"compile_{o.kind}")(
+                g, root=root, num_chunks=o.num_chunks, verify=o.verify)
+        return getattr(schedule_mod, f"compile_{o.kind}")(
+            g, num_chunks=o.num_chunks, fixed_k=o.fixed_k, verify=o.verify)
+
+    def family(self, topo: SpecLike,
+               kinds: Sequence[str] = PAIR_KINDS,
+               opts: Optional[CompileOptions] = None,
+               timings: Optional[Dict[str, float]] = None,
+               packed_out: Optional[Dict[str, Any]] = None,
+               **overrides: Any) -> Dict[str, Artifact]:
+        """One topology's collective family compiled together — the §2.1
+        solve and the split/pack products shared across kinds
+        (`ScheduleCache.family` on the cache path, `plan.compile_family`
+        otherwise; byte-identical to per-kind compiles).  ``timings``
+        receives per-kind marginal wall seconds; ``packed_out`` (fresh
+        compiles only) the pre-rounds plans for P >= depth re-rounding."""
+        g = self.topology(topo)
+        o = self.opts(opts, **overrides)
+        root = (o.replace(kind="broadcast").resolved_root(g)
+                if any(k in ROOTED_KINDS for k in kinds) else None)
+        if self.cache is not None:
+            with self._verify_on_compile(o.verify):
+                return self.cache.family(g, kinds, num_chunks=o.num_chunks,
+                                         fixed_k=o.fixed_k, root=root,
+                                         timings=timings)
+        return plan_mod.compile_family(
+            g, kinds=kinds, num_chunks=o.num_chunks, root=root,
+            fixed_k=o.fixed_k, verify=o.verify, timings=timings,
+            packed_out=packed_out)
+
+    def pair(self, topo: SpecLike,
+             opts: Optional[CompileOptions] = None,
+             **overrides: Any) -> Tuple[PipelineSchedule, PipelineSchedule]:
+        """(allgather, reduce_scatter) compiled as one family."""
+        fam = self.family(topo, PAIR_KINDS, opts, **overrides)
+        return fam["allgather"], fam["reduce_scatter"]
+
+    # -------------------------------------------------------------- #
+    # lowered programs / executables
+    # -------------------------------------------------------------- #
+
+    def lower(self, artifact: Artifact):
+        """Stage-5 lowering of a compiled artifact to static `lax.ppermute`
+        program(s); an `AllReduceSchedule` lowers to ``(rs_prog,
+        ag_prog)`` — the argument order `tree_all_reduce` expects."""
+        from repro.comms.executor import compile_program
+        if isinstance(artifact, AllReduceSchedule):
+            return compile_program(artifact.rs), compile_program(artifact.ag)
+        return compile_program(artifact)
+
+    def program(self, topo: SpecLike,
+                opts: Optional[CompileOptions] = None, **overrides: Any):
+        """Schedule + lower in one step.  ``kind="allreduce"`` returns
+        ``(rs_prog, ag_prog)``; every other kind one `PermuteProgram`."""
+        return self.lower(self.schedule(topo, opts, **overrides))
+
+    def executable(self, topo: SpecLike, *, axis_name: str,
+                   opts: Optional[CompileOptions] = None,
+                   **overrides: Any) -> Callable:
+        """A ready-to-call collective for use INSIDE `shard_map` over
+        ``axis_name``: the schedule is compiled (or replayed), lowered,
+        and bound to the matching `repro.comms.collectives.tree_*`
+        executor.  Extra keyword arguments of the underlying ``tree_*``
+        function (e.g. ``accum_dtype``) pass through the returned
+        callable."""
+        o = self.opts(opts, **overrides)
+        from repro.comms import collectives as tree_mod
+        if o.kind == "allreduce":
+            rs_prog, ag_prog = self.program(topo, o)
+
+            def run_allreduce(x, **kw):
+                return tree_mod.tree_all_reduce(x, rs_prog, ag_prog,
+                                                axis_name, **kw)
+            return run_allreduce
+        prog = self.program(topo, o)
+        fn = {
+            "allgather": tree_mod.tree_all_gather,
+            "reduce_scatter": tree_mod.tree_reduce_scatter,
+            "broadcast": tree_mod.tree_broadcast,
+            "reduce": tree_mod.tree_reduce,
+        }[o.kind]
+
+        def run(x, **kw):
+            return fn(x, prog, axis_name, **kw)
+        return run
+
+    # -------------------------------------------------------------- #
+    # introspection
+    # -------------------------------------------------------------- #
+
+    def describe(self) -> str:
+        cache = self.cache.describe() if self.cache is not None else "none"
+        return f"Collectives[{self.options}] cache={cache}"

@@ -41,6 +41,18 @@ marginal ``compile_time_s``.
 where the floor-scaled graph can't be compiled for that k are reported in
 the document's ``skipped`` list rather than failing the sweep.
 
+The swept topologies come from the declarative zoo registry
+(`repro.topo.spec.zoo_specs()` — the `ZOO_SPECS` table keyed by BENCH row
+name), and ``--topology SPEC`` adds arbitrary non-zoo fabrics using the
+full spec grammar, transforms included, without any code edit:
+
+    python -m repro.cache.sweep --topology "torus2d:6x6@fail(0-1)" \
+        "dragonfly:g4,p3"
+
+Such rows are named by their canonical spec string.  All compilation goes
+through the `repro.api.Collectives` facade (cache-first when a cache dir
+is given).
+
 Runs topologies in parallel with `concurrent.futures` (each worker
 compiles one topology's whole family); pass a cache dir to make repeated
 sweeps (and any launch that follows) skip compilation.
@@ -59,13 +71,11 @@ import time
 from fractions import Fraction
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.api import Collectives
 from repro.core import schedule as schedule_mod
 from repro.core import simulate as sim
 from repro.core.graph import DiGraph
-from repro.topo import (bcube, bidir_ring, degrade_link, dgx_box, dragonfly,
-                        fail_link, fat_tree, fig1a, hypercube, line,
-                        mesh_of_dgx, multipod_topology, ring, star_switch,
-                        torus_2d, two_cluster_switch)
+from repro.topo.spec import TopologySpec, zoo_specs
 
 from .fingerprint import compiler_fingerprint
 
@@ -100,59 +110,37 @@ def claim_mismatches(doc: Dict[str, Any]) -> List[str]:
 
 
 def sweep_registry() -> Dict[str, Callable[[], DiGraph]]:
-    """The expanded zoo: paper families + hypercube/BCube/mesh-of-DGX and
-    degraded / failed-link variants."""
-    return {
-        "fig1a": fig1a,
-        "fig1a_degraded": lambda: degrade_link(
-            two_cluster_switch(4, 10, 2), 0, 8, 1, name="fig1a-deg"),
-        "ring8": lambda: ring(8),
-        "bring8": lambda: bidir_ring(8),
-        "bring8_degraded": lambda: degrade_link(bidir_ring(8, cap=2), 0, 1, 1),
-        "line6": lambda: line(6),
-        "torus4x4": lambda: torus_2d(4, 4),
-        "torus3x3_failed": lambda: fail_link(torus_2d(3, 3), 0, 1),
-        "hypercube3": lambda: hypercube(3),
-        "hypercube3_failed": lambda: fail_link(hypercube(3), 0, 1),
-        "bcube2": lambda: bcube(2),
-        "bcube3": lambda: bcube(3),
-        "meshdgx2x2": lambda: mesh_of_dgx(2, 2, 2),
-        "meshdgx2x2_degraded": lambda: degrade_link(
-            mesh_of_dgx(2, 2, 2, nvlink_cap=4, dcn_cap=2), 8, 9, 1),
-        "fattree": fat_tree,
-        "dragonfly": dragonfly,
-        "dgx8": dgx_box,
-        "star8": lambda: star_switch(8),
-        "two_cluster_3x6": lambda: two_cluster_switch(3, 6, 2),
-        "multipod": lambda: multipod_topology(2, 4, 10, 1),
-        # scaled-up rows: the split/pack hot paths dominate even harder
-        # here (64 compute nodes, multi-switch fabrics) — these are the
-        # rows the warm-started oracle engine is proven on
-        "torus8x8": lambda: torus_2d(8, 8),
-        "torus8x8_failed": lambda: fail_link(torus_2d(8, 8), 0, 1),
-        "fattree8p4l2h": lambda: fat_tree(8, 4, 2),
-        "fattree8p4l2h_degraded": lambda: degrade_link(
-            fat_tree(8, 4, 2, host_cap=2), 0, 64, 1),
-        "dragonfly6x4": lambda: dragonfly(6, 4, 4, 1),
-        "dragonfly6x4_degraded": lambda: degrade_link(
-            dragonfly(6, 4, 4, 1), 0, 24, 2),
-    }
+    """The expanded zoo (paper families + hypercube/BCube/mesh-of-DGX and
+    degraded / failed-link variants) as ``{row_name: builder}``, derived
+    from the declarative `repro.topo.zoo.ZOO_SPECS` registry."""
+    return {name: spec.build for name, spec in zoo_specs().items()}
+
+
+def _build_topology(name: str) -> DiGraph:
+    """A sweep row's graph: a committed zoo row name, or (for --topology
+    rows) the canonical spec string itself."""
+    specs = zoo_specs()
+    if name in specs:
+        return specs[name].build()
+    return TopologySpec.parse(name).build()
+
+
+def _known_name(name: str) -> bool:
+    if name in zoo_specs():
+        return True
+    try:
+        TopologySpec.parse(name)
+        return True
+    except ValueError:
+        return False
 
 
 def _compile(kind: str, g: DiGraph, num_chunks: int,
              cache_dir: Optional[str], root: Optional[int],
              fixed_k: Optional[int] = None):
-    if cache_dir:
-        from .store import ScheduleCache
-        cache = ScheduleCache(cache_dir)
-        if kind in ("broadcast", "reduce"):
-            return getattr(cache, kind)(g, root=root, num_chunks=num_chunks)
-        return getattr(cache, kind)(g, num_chunks=num_chunks, fixed_k=fixed_k)
-    if kind in ("broadcast", "reduce"):
-        return getattr(schedule_mod, f"compile_{kind}")(
-            g, root=root, num_chunks=num_chunks)
-    return getattr(schedule_mod, f"compile_{kind}")(g, num_chunks=num_chunks,
-                                                    fixed_k=fixed_k)
+    return Collectives(cache=cache_dir).schedule(
+        g, kind=kind, root=root, num_chunks=num_chunks,
+        fixed_k=None if kind in ("broadcast", "reduce") else fixed_k)
 
 
 def _compile_family(g: DiGraph, kinds: Sequence[str], num_chunks: int,
@@ -163,15 +151,9 @@ def _compile_family(g: DiGraph, kinds: Sequence[str], num_chunks: int,
     (cache-backed when a cache dir is given); `timings` receives per-kind
     marginal wall seconds, `packed` the pre-rounds plans (fresh-compile
     path only — a cache hit needs no re-rounding plan)."""
-    if cache_dir:
-        from .store import ScheduleCache
-        return ScheduleCache(cache_dir).family(
-            g, kinds, num_chunks=num_chunks, fixed_k=fixed_k, root=root,
-            timings=timings)
-    from repro.core import plan as plan_mod
-    return plan_mod.compile_family(g, kinds=kinds, num_chunks=num_chunks,
-                                   root=root, fixed_k=fixed_k,
-                                   timings=timings, packed_out=packed)
+    return Collectives(cache=cache_dir).family(
+        g, kinds, num_chunks=num_chunks, fixed_k=fixed_k, root=root,
+        timings=timings, packed_out=packed)
 
 
 def _rechunked(packed_plan, num_chunks: int):
@@ -288,7 +270,7 @@ def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
               fixed_k: Optional[int] = None) -> Dict[str, Any]:
     """Compile one (topology, collective) pair (P >= depth enforced), verify
     chunk-by-chunk, simulate, and return a scoreboard entry."""
-    g = sweep_registry()[name]()
+    g = _build_topology(name)
     root = min(g.compute) if kind in ("broadcast", "reduce") else None
     t0 = time.perf_counter()
     sched = _compile(kind, g, num_chunks, cache_dir, root, fixed_k)
@@ -313,7 +295,7 @@ def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
     PackingError or a verification failure is a compiler bug and still
     fails the run."""
     from repro.core.edge_split import EdgeSplitError
-    g = sweep_registry()[name]()
+    g = _build_topology(name)
     root = (min(g.compute)
             if any(k in ("broadcast", "reduce") for k in kinds) else None)
     try:
@@ -361,9 +343,16 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
               jobs: Optional[int] = None, cache_dir: Optional[str] = None,
               out_path: Optional[str] = None,
               collectives: Optional[Sequence[str]] = None,
-              fixed_k: Optional[int] = None) -> Dict[str, Any]:
-    names = list(names if names is not None else sweep_registry())
-    unknown = [n for n in names if n not in sweep_registry()]
+              fixed_k: Optional[int] = None,
+              topologies: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+    """Sweep the named zoo rows (default: all of them) plus any extra
+    `topologies` given as raw spec strings (rows named by the canonical
+    spec form); `names` entries may themselves be spec strings."""
+    names = list(names) if names is not None else (
+        [] if topologies else list(sweep_registry()))
+    for text in topologies or ():
+        names.append(str(TopologySpec.parse(text)))
+    unknown = [n for n in names if not _known_name(n)]
     if unknown:
         raise KeyError(f"unknown sweep topologies: {unknown}")
     if collectives is None:
@@ -422,6 +411,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--smoke", action="store_true",
                     help=f"only the 3 small smoke topologies {SMOKE_NAMES}")
     ap.add_argument("--names", nargs="*", default=None)
+    ap.add_argument("--topology", nargs="*", default=None, metavar="SPEC",
+                    help="extra topologies as TopologySpec strings (full "
+                         "grammar incl. transforms, e.g. "
+                         "'torus2d:6x6@fail(0-1)'); swept alongside --names "
+                         "(or alone), rows named by the canonical spec form")
     ap.add_argument("--collectives", nargs="*", default=None,
                     choices=list(COLLECTIVES),
                     help="collective kinds to sweep (default: all of "
@@ -447,10 +441,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     names = list(SMOKE_NAMES) if args.smoke else args.names
     if args.out is None:
         args.out = default_out_path(
-            partial=names is not None or args.fixed_k is not None)
+            partial=names is not None or args.topology is not None
+            or args.fixed_k is not None)
     doc = run_sweep(names=names, num_chunks=args.chunks, jobs=args.jobs,
                     cache_dir=args.cache_dir, out_path=args.out,
-                    collectives=args.collectives, fixed_k=args.fixed_k)
+                    collectives=args.collectives, fixed_k=args.fixed_k,
+                    topologies=args.topology)
     for e in doc["entries"]:
         print(f"{e['name']}.{e['kind']},{e['compile_time_s'] * 1e6:.1f},"
               f"inv_x*={e['inv_x_star']};k={e['k']};depth={e['depth']};"

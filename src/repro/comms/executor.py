@@ -134,66 +134,46 @@ def compile_program(sched: PipelineSchedule) -> PermuteProgram:
 
 
 # ---------------------------------------------------------------------- #
-# cache-aware schedule acquisition
+# cache-aware schedule acquisition — DEPRECATED shims over repro.api
 # ---------------------------------------------------------------------- #
 
 def schedules_for_topology(topo: DiGraph, num_chunks: int = 8,
                            fixed_k: Optional[int] = None, cache=None,
                            kind: Optional[str] = None,
                            root: Optional[int] = None):
-    """Schedule artifacts for `topo`, consulting a
-    `repro.cache.ScheduleCache` first when one is given — a hit replays the
-    serialized artifact and never invokes the compiler.
+    """DEPRECATED — use `repro.api.Collectives.schedule` / `.pair`.
 
-    kind selects the collective:
-      None             — pair: (allgather, reduce_scatter), compiled as one
-                         family so the §2.1 solve and the split/pack
-                         products are shared between the two orientations
-                         (`ScheduleCache.family` on the cache path,
-                         `plan.compile_family` otherwise — byte-identical
-                         to the per-kind compilers)
-      "allgather" / "reduce_scatter" — one PipelineSchedule
-      "broadcast" / "reduce"         — one PipelineSchedule; `root` required
-      "allreduce"      — one AllReduceSchedule (RS + AG sharing one cached
-                         artifact)
-    """
+    Kept as an externally-compatible shim: ``kind=None`` returns the
+    (allgather, reduce_scatter) pair compiled as one family, any other kind
+    one artifact, exactly as before — but the work is delegated to the
+    `Collectives` facade and a `ReproDeprecationWarning` is raised (tier-1
+    promotes it to an error for in-repo callers)."""
+    from repro.api import Collectives, warn_deprecated
+    warn_deprecated("repro.comms.schedules_for_topology",
+                    "repro.api.Collectives.schedule (or .pair/.family)")
+    coll = Collectives(cache=cache, num_chunks=num_chunks, fixed_k=fixed_k)
     if kind is None:
-        pair = ("allgather", "reduce_scatter")
-        if cache is not None:
-            arts = cache.family(topo, pair, num_chunks=num_chunks,
-                                fixed_k=fixed_k)
-        else:
-            from repro.core import plan as plan_mod
-            arts = plan_mod.compile_family(topo, kinds=pair,
-                                           num_chunks=num_chunks,
-                                           fixed_k=fixed_k)
-        return arts["allgather"], arts["reduce_scatter"]
-    if kind in ("broadcast", "reduce"):
-        if root is None:
-            raise ValueError(f"{kind} schedules need an explicit root")
-        if cache is not None:
-            return getattr(cache, kind)(topo, root=root,
-                                        num_chunks=num_chunks)
-        from repro.core import schedule as schedule_mod
-        return getattr(schedule_mod, f"compile_{kind}")(
-            topo, root=root, num_chunks=num_chunks)
-    if kind not in ("allgather", "reduce_scatter", "allreduce"):
+        return coll.pair(topo)
+    if kind in ("broadcast", "reduce") and root is None:
+        raise ValueError(f"{kind} schedules need an explicit root")
+    if kind not in ("allgather", "reduce_scatter", "broadcast", "reduce",
+                    "allreduce"):
         raise ValueError(f"unknown collective kind {kind!r}")
-    if cache is not None:
-        return getattr(cache, kind)(topo, num_chunks=num_chunks,
-                                    fixed_k=fixed_k)
-    from repro.core import schedule as schedule_mod
-    return getattr(schedule_mod, f"compile_{kind}")(
-        topo, num_chunks=num_chunks, fixed_k=fixed_k)
+    return coll.schedule(topo, kind=kind, root=root,
+                         fixed_k=None if kind in ("broadcast", "reduce")
+                         else fixed_k)
 
 
 def programs_for_topology(topo: DiGraph, num_chunks: int = 8,
                           fixed_k: Optional[int] = None, cache=None
                           ) -> Tuple[PermuteProgram, PermuteProgram]:
-    """(rs_prog, ag_prog) — the argument order `tree_all_reduce` expects."""
-    ag, rs = schedules_for_topology(topo, num_chunks, fixed_k, cache)
+    """DEPRECATED — use `repro.api.Collectives.program(kind="allreduce")`,
+    which returns the same (rs_prog, ag_prog) pair `tree_all_reduce`
+    expects."""
+    from repro.api import Collectives, warn_deprecated
+    warn_deprecated("repro.comms.programs_for_topology",
+                    'repro.api.Collectives.program(kind="allreduce")')
+    coll = Collectives(cache=cache, num_chunks=num_chunks, fixed_k=fixed_k)
+    ag, rs = coll.pair(topo)
     return compile_program(rs), compile_program(ag)
-
-
-
 

@@ -3,21 +3,26 @@
 Production collectives on a TPU mesh decompose axis-wise (an allreduce over
 ('pod','data') = hierarchical RS/AG per axis).  Each axis has a *physical*
 topology model (torus ring for ICI axes, switch star / pipe for the DCN
-'pod' axis) and gets its own bandwidth-optimal schedule from the paper's
-compiler.  Programs are cached per (axis, kind, P) in memory; pass an
-on-disk `repro.cache.ScheduleCache` to also skip compilation across
-processes/launches.
+'pod' axis) and gets its own bandwidth-optimal schedule through the
+`repro.api.Collectives` facade.  Programs are cached per (axis, kind, P) in
+memory; attach an on-disk `repro.cache.ScheduleCache` (or pass a facade
+that owns one) to also skip compilation across processes/launches.
+
+Axis topology overrides accept every `Collectives` topology form: a
+`DiGraph`, a `TopologySpec`, a zoo row name, or a raw spec string —
+``CollectiveContext({'data': 8}, topologies={'data': 'bring:8'})``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.api import Collectives
 from repro.core.graph import DiGraph
 from repro.core.schedule import PipelineSchedule
+from repro.topo.spec import SpecLike, resolve_topology
 from repro.topo.tpu import axis_topology_for_mesh
-from .executor import PermuteProgram, compile_program, schedules_for_topology
+from .executor import PermuteProgram
 
 
 @dataclasses.dataclass
@@ -34,23 +39,46 @@ class CollectiveContext:
     """Holds compiled tree-pipeline programs for every axis of a mesh.
 
     mesh_axes: {axis_name: size}.  Topologies default to the TPU model
-    (`axis_topology_for_mesh`) but can be overridden per axis — this is the
-    knob the perf loop turns (ring vs torus-line vs custom DCN model).
+    (`axis_topology_for_mesh`) but can be overridden per axis with any
+    spec form — this is the knob the perf loop turns (ring vs torus-line
+    vs custom DCN model).  All schedule acquisition goes through one
+    `repro.api.Collectives` facade: pass ``collectives=`` to share a
+    configured facade, or the legacy ``schedule_cache=`` /
+    ``num_chunks`` / ``fixed_k`` knobs to have the context build one.
     """
 
-    def __init__(self, mesh_axes: Dict[str, int], num_chunks: int = 8,
-                 topologies: Optional[Dict[str, DiGraph]] = None,
+    def __init__(self, mesh_axes: Dict[str, int],
+                 num_chunks: Optional[int] = None,
+                 topologies: Optional[Dict[str, SpecLike]] = None,
                  fixed_k: Optional[int] = None,
-                 schedule_cache=None):
+                 schedule_cache=None,
+                 collectives: Optional[Collectives] = None):
         self.mesh_axes = dict(mesh_axes)
-        self.num_chunks = num_chunks
-        self.fixed_k = fixed_k
-        self.schedule_cache = schedule_cache  # Optional[ScheduleCache]
-        self._topologies = dict(topologies or {})
+        if collectives is None:
+            collectives = Collectives(
+                cache=schedule_cache,
+                num_chunks=num_chunks if num_chunks is not None else 8,
+                fixed_k=fixed_k)
+        elif (schedule_cache is not None or num_chunks is not None
+              or fixed_k is not None):
+            raise TypeError("pass either collectives= or the legacy "
+                            "schedule_cache=/num_chunks=/fixed_k= knobs, "
+                            "not both — the facade already carries them")
+        self.collectives = collectives
+        self.num_chunks = collectives.options.num_chunks
+        self.fixed_k = collectives.options.fixed_k
+        self._topologies: Dict[str, DiGraph] = {
+            axis: resolve_topology(t)
+            for axis, t in (topologies or {}).items()}
         self._cache: Dict[str, AxisSchedules] = {}
         self._allreduce: Dict[str, object] = {}
         self._broadcast: Dict[Tuple[str, int], PermuteProgram] = {}
         self._broadcast_scheds: Dict[Tuple[str, int], PipelineSchedule] = {}
+
+    @property
+    def schedule_cache(self):
+        """The facade's attached `ScheduleCache` (None when uncached)."""
+        return self.collectives.cache
 
     def topology(self, axis: str) -> DiGraph:
         if axis not in self._topologies:
@@ -60,18 +88,18 @@ class CollectiveContext:
 
     def axis(self, axis: str) -> AxisSchedules:
         """AG + RS schedules and programs for one axis, compiled as a
-        single family (`ScheduleCache.family` when a cache is attached):
-        the §2.1 solve and the split/pack products are shared between the
-        two orientations instead of being recomputed per kind."""
+        single family through the facade: the §2.1 solve and the
+        split/pack products are shared between the two orientations
+        instead of being recomputed per kind."""
         if axis not in self._cache:
             topo = self.topology(axis)
-            ag, rs = schedules_for_topology(
-                topo, num_chunks=self.num_chunks, fixed_k=self.fixed_k,
-                cache=self.schedule_cache)
+            ag, rs = self.collectives.pair(topo)
+            ag_prog, rs_prog = (self.collectives.lower(ag),
+                                self.collectives.lower(rs))
             self._cache[axis] = AxisSchedules(
                 axis_name=axis, topology=topo,
                 ag_sched=ag, rs_sched=rs,
-                ag_prog=compile_program(ag), rs_prog=compile_program(rs))
+                ag_prog=ag_prog, rs_prog=rs_prog)
         return self._cache[axis]
 
     def allreduce_schedule(self, axis: str):
@@ -79,10 +107,8 @@ class CollectiveContext:
         compiled into) the schedule cache as a single `repro.allreduce`
         artifact — the entry `BucketedAllReduce` consumers replay."""
         if axis not in self._allreduce:
-            self._allreduce[axis] = schedules_for_topology(
-                self.topology(axis), num_chunks=self.num_chunks,
-                fixed_k=self.fixed_k, cache=self.schedule_cache,
-                kind="allreduce")
+            self._allreduce[axis] = self.collectives.schedule(
+                self.topology(axis), kind="allreduce")
         return self._allreduce[axis]
 
     def bucketed_allreduce(self, axis: str, bucket_bytes: int = 64 << 20,
@@ -103,11 +129,10 @@ class CollectiveContext:
         memoized per (axis, root)."""
         key = (axis, root)
         if key not in self._broadcast:
-            sched = schedules_for_topology(
-                self.topology(axis), num_chunks=self.num_chunks,
-                cache=self.schedule_cache, kind="broadcast", root=root)
+            sched = self.collectives.schedule(
+                self.topology(axis), kind="broadcast", root=root)
             self._broadcast_scheds[key] = sched
-            self._broadcast[key] = compile_program(sched)
+            self._broadcast[key] = self.collectives.lower(sched)
         return self._broadcast[key]
 
     def allreduce_programs(self, axes: Sequence[str]

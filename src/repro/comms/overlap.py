@@ -56,10 +56,9 @@ class BucketedAllReduce:
                       wire_dtype: Optional[Any] = jnp.bfloat16
                       ) -> "BucketedAllReduce":
         """Build the gradient hook from ONE `AllReduceSchedule` artifact —
-        typically `ScheduleCache.allreduce(...)` or
-        `repro.comms.schedules_for_topology(..., kind="allreduce")`, so the
-        RS and AG halves replay from a single cached `repro.allreduce`
-        entry."""
+        typically `repro.api.Collectives.schedule(..., kind="allreduce")`
+        (cache-backed), so the RS and AG halves replay from a single cached
+        `repro.allreduce` entry."""
         from .executor import compile_program
         return cls(rs_prog=compile_program(ar.rs),
                    ag_prog=compile_program(ar.ag), axis_name=axis_name,

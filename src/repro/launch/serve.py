@@ -66,16 +66,14 @@ def main() -> int:
         # the XLA-collective engine below is unaffected).  With mp > 1 the
         # context also provides the broadcast program used to distribute
         # the parameters below.
+        from repro.api import Collectives
         from repro.comms import CollectiveContext
-        cache = None
-        if args.schedule_cache:
-            from repro.cache import ScheduleCache
-            cache = ScheduleCache(args.schedule_cache)
+        coll = Collectives(cache=args.schedule_cache or None)
         ctx = CollectiveContext({"data": 1, "model": mp},
-                                schedule_cache=cache)
+                                collectives=coll)
         print(ctx.describe())
-        if cache is not None:
-            print(cache.describe())
+        if coll.cache is not None:
+            print(coll.cache.describe())
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0),

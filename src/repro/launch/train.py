@@ -80,16 +80,15 @@ def main() -> int:
         # later launches deserialize.  Under --collectives pipeline the
         # BucketedAllReduce gradient hook below replays the cached
         # `repro.allreduce` artifact end-to-end.
-        from repro.cache import ScheduleCache
+        from repro.api import Collectives
         from repro.comms import CollectiveContext
-        cache = ScheduleCache(args.schedule_cache) \
-            if args.schedule_cache else None
+        coll = Collectives(cache=args.schedule_cache or None)
         ctx = CollectiveContext(dict(zip(mesh.axis_names,
                                          mesh.devices.shape)),
-                                schedule_cache=cache)
+                                collectives=coll)
         print(ctx.describe())
-        if cache is not None:
-            print(cache.describe())
+        if coll.cache is not None:
+            print(coll.cache.describe())
         if args.collectives != "pipeline":
             # pipeline mode prints the report after the allreduce artifact
             # is acquired; here the per-axis AG/RS programs are all there is

@@ -1,4 +1,10 @@
+from .spec import (  # noqa: F401
+    TopologySpec, TopologySpecError, TransformSpec, register_topology,
+    register_transform, resolve_topology, topology_families,
+    transform_names, zoo_specs,
+)
 from .zoo import (  # noqa: F401
+    ZOO_SPECS,
     ring, bidir_ring, line, fully_connected, torus_2d, torus_3d,
     hypercube, star_switch, two_cluster_switch, fig1a, fig1d_ring_unwound,
     fat_tree, dragonfly, dgx_box, bcube, mesh_of_dgx,

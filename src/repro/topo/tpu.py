@@ -14,6 +14,8 @@ from typing import Dict, Tuple
 
 from repro.core.graph import DiGraph, Edge
 
+from .spec import register_topology
+
 
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
@@ -41,6 +43,7 @@ TPU_V5E = HardwareSpec(
 # Topology models for the schedule compiler
 # ---------------------------------------------------------------------- #
 
+@register_topology("v5e", pattern="{rows}x{cols}")
 def v5e_pod_topology(rows: int = 16, cols: int = 16,
                      cap: int = 1) -> DiGraph:
     """A v5e pod is a (wrapped) 2-D ICI torus; one capacity unit == one ICI
@@ -50,6 +53,7 @@ def v5e_pod_topology(rows: int = 16, cols: int = 16,
     return DiGraph(g.num_nodes, g.compute, g.cap, f"v5e-{rows}x{cols}")
 
 
+@register_topology("multipod", pattern="{num_pods}x{nodes_per_pod}")
 def multipod_topology(num_pods: int = 2, nodes_per_pod: int = 4,
                       ici_cap: int = 10, dcn_cap: int = 1) -> DiGraph:
     """Pod-level multi-pod model: per-pod ICI modelled as a local switch with

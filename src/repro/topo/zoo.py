@@ -3,6 +3,11 @@
 All constructors return `DiGraph` with integer capacities.  Compute nodes are
 always numbered first (0..N-1), switches after, so compute node ids coincide
 with device/rank ids in the runtime.
+
+Every constructor self-registers as a `repro.topo.spec.TopologySpec` family
+(the `@register_topology` decorator), and the committed sweep zoo lives here
+as the declarative `ZOO_SPECS` table — `sweep_registry()`, BENCH row names,
+cache keys and the ``--topology`` CLI all derive from it.
 """
 from __future__ import annotations
 
@@ -10,17 +15,21 @@ from typing import Dict, List, Tuple
 
 from repro.core.graph import DiGraph, Edge
 
+from .spec import register_topology, register_transform
+
 
 # ---------------------------------------------------------------------- #
 # direct-connect basics
 # ---------------------------------------------------------------------- #
 
+@register_topology("ring", pattern="{n}")
 def ring(n: int, cap: int = 1, name: str | None = None) -> DiGraph:
     """Unidirectional ring 0 -> 1 -> ... -> n-1 -> 0."""
     edges = {(i, (i + 1) % n): cap for i in range(n)}
     return DiGraph(n, frozenset(range(n)), edges, name or f"ring{n}")
 
 
+@register_topology("bring", pattern="{n}")
 def bidir_ring(n: int, cap: int = 1, name: str | None = None) -> DiGraph:
     edges: Dict[Edge, int] = {}
     for i in range(n):
@@ -29,6 +38,7 @@ def bidir_ring(n: int, cap: int = 1, name: str | None = None) -> DiGraph:
     return DiGraph(n, frozenset(range(n)), edges, name or f"bring{n}")
 
 
+@register_topology("line", pattern="{n}")
 def line(n: int, cap: int = 1) -> DiGraph:
     """Bidirectional path graph — the pathological non-symmetric case."""
     edges: Dict[Edge, int] = {}
@@ -38,11 +48,13 @@ def line(n: int, cap: int = 1) -> DiGraph:
     return DiGraph(n, frozenset(range(n)), edges, f"line{n}")
 
 
+@register_topology("full", pattern="{n}")
 def fully_connected(n: int, cap: int = 1) -> DiGraph:
     edges = {(i, j): cap for i in range(n) for j in range(n) if i != j}
     return DiGraph(n, frozenset(range(n)), edges, f"full{n}")
 
 
+@register_topology("torus2d", pattern="{rows}x{cols}")
 def torus_2d(rows: int, cols: int, cap: int = 1,
              wrap: bool = True) -> DiGraph:
     """2-D (wrapped) torus — the TPU ICI shape.  Bidirectional links."""
@@ -69,6 +81,7 @@ def torus_2d(rows: int, cols: int, cap: int = 1,
                    f"torus{rows}x{cols}" + ("" if wrap else "-mesh"))
 
 
+@register_topology("hypercube", pattern="{dim}")
 def hypercube(dim: int, cap: int = 1) -> DiGraph:
     """dim-dimensional binary hypercube, bidirectional links."""
     n = 1 << dim
@@ -80,6 +93,7 @@ def hypercube(dim: int, cap: int = 1) -> DiGraph:
     return DiGraph(n, frozenset(range(n)), edges, f"hcube{dim}")
 
 
+@register_topology("torus3d", pattern="{x}x{y}x{z}")
 def torus_3d(x: int, y: int, z: int, cap: int = 1) -> DiGraph:
     n = x * y * z
 
@@ -104,6 +118,7 @@ def torus_3d(x: int, y: int, z: int, cap: int = 1) -> DiGraph:
 # switch topologies
 # ---------------------------------------------------------------------- #
 
+@register_topology("star", pattern="{n}")
 def star_switch(n: int, cap: int = 1) -> DiGraph:
     """n compute nodes hanging off one switch (id n)."""
     edges: Dict[Edge, int] = {}
@@ -113,6 +128,7 @@ def star_switch(n: int, cap: int = 1) -> DiGraph:
     return DiGraph(n + 1, frozenset(range(n)), edges, f"star{n}")
 
 
+@register_topology("two_cluster", pattern="{per_cluster},{local_cap},{global_cap}")
 def two_cluster_switch(per_cluster: int = 4, local_cap: int = 10,
                        global_cap: int = 1) -> DiGraph:
     """The paper's Figure 1a: two clusters of `per_cluster` compute nodes,
@@ -136,11 +152,13 @@ def two_cluster_switch(per_cluster: int = 4, local_cap: int = 10,
                    f"fig1a[{per_cluster}x2,{local_cap}/{global_cap}]")
 
 
+@register_topology("fig1a")
 def fig1a() -> DiGraph:
     """Paper Figure 1a with b = 1."""
     return two_cluster_switch(4, 10, 1)
 
 
+@register_topology("fig1d")
 def fig1d_ring_unwound() -> DiGraph:
     """Paper Figure 1d: the *suboptimal* TACCL/TACOS-style unwinding of
     Fig 1a into directed rings (each node's switch egress feeds the next
@@ -159,6 +177,7 @@ def fig1d_ring_unwound() -> DiGraph:
     return DiGraph(8, frozenset(range(8)), edges, "fig1d-ring-unwound")
 
 
+@register_topology("fattree", pattern="{pods}p{leaf_per_pod}l{hosts_per_leaf}h")
 def fat_tree(pods: int = 4, leaf_per_pod: int = 2, hosts_per_leaf: int = 2,
              host_cap: int = 1, up_cap: int | None = None) -> DiGraph:
     """Two-level fat tree: hosts -> leaf switches -> spine switches.
@@ -181,6 +200,7 @@ def fat_tree(pods: int = 4, leaf_per_pod: int = 2, hosts_per_leaf: int = 2,
                    f"fattree[{pods}p{leaf_per_pod}l{hosts_per_leaf}h]")
 
 
+@register_topology("dragonfly", pattern="g{groups},p{per_group}")
 def dragonfly(groups: int = 3, per_group: int = 2, local_cap: int = 4,
               global_cap: int = 1) -> DiGraph:
     """Dragonfly-lite: per-group router (switch) with all-to-all global links
@@ -201,6 +221,7 @@ def dragonfly(groups: int = 3, per_group: int = 2, local_cap: int = 4,
                    f"dragonfly[{groups}x{per_group}]")
 
 
+@register_topology("dgx", pattern="{n}")
 def dgx_box(n: int = 8, nvlink_cap: int = 12, nic_cap: int = 1) -> DiGraph:
     """A DGX-like box: fully-connected NVLink between n GPUs + a NIC switch
     (models the egress bottleneck when boxes join a fabric)."""
@@ -212,6 +233,7 @@ def dgx_box(n: int = 8, nvlink_cap: int = 12, nic_cap: int = 1) -> DiGraph:
     return DiGraph(n + 1, frozenset(range(n)), edges, f"dgx{n}")
 
 
+@register_topology("bcube", pattern="{n}")
 def bcube(n: int = 2, cap: int = 1) -> DiGraph:
     """BCube_1(n): n² servers, n level-0 switches (one per pod of n servers)
     and n level-1 switches (one per within-pod index).  Server (p, i) =
@@ -230,6 +252,7 @@ def bcube(n: int = 2, cap: int = 1) -> DiGraph:
                    f"bcube{n}")
 
 
+@register_topology("meshdgx", pattern="{rows}x{cols}x{gpus}")
 def mesh_of_dgx(rows: int = 2, cols: int = 2, gpus: int = 2,
                 nvlink_cap: int = 4, dcn_cap: int = 1) -> DiGraph:
     """2-D (non-wrapping) mesh of DGX-style boxes: each box is `gpus`
@@ -265,6 +288,7 @@ def mesh_of_dgx(rows: int = 2, cols: int = 2, gpus: int = 2,
 # degraded / failed-link variants
 # ---------------------------------------------------------------------- #
 
+@register_transform("fail")
 def fail_link(g: DiGraph, u: int, v: int, name: str | None = None) -> DiGraph:
     """Remove the bidirectional link u<->v (both directed edges must exist,
     with equal capacity, so the result stays Eulerian)."""
@@ -272,12 +296,13 @@ def fail_link(g: DiGraph, u: int, v: int, name: str | None = None) -> DiGraph:
         raise ValueError(f"{g.name}: ({u},{v}) is not a symmetric link")
     cap = {e: c for e, c in g.cap.items() if e not in ((u, v), (v, u))}
     out = DiGraph(g.num_nodes, g.compute, cap,
-                  name or f"{g.name}-fail{u}_{v}")
+                  name or f"{g.name}@fail({u}-{v})")
     if not out.is_eulerian():
         raise ValueError(f"{g.name}: failing ({u},{v}) breaks Eulerian-ness")
     return out
 
 
+@register_transform("degrade")
 def degrade_link(g: DiGraph, u: int, v: int, cap: int,
                  name: str | None = None) -> DiGraph:
     """Reduce the bidirectional link u<->v to `cap` per direction (models a
@@ -290,4 +315,46 @@ def degrade_link(g: DiGraph, u: int, v: int, cap: int,
     new = dict(g.cap)
     new[(u, v)] = new[(v, u)] = cap
     return DiGraph(g.num_nodes, g.compute, new,
-                   name or f"{g.name}-deg{u}_{v}x{cap}")
+                   name or f"{g.name}@degrade({u}-{v},cap={cap})")
+
+
+# ---------------------------------------------------------------------- #
+# the committed sweep zoo, declaratively
+# ---------------------------------------------------------------------- #
+
+#: Row name -> spec string for every committed sweep/BENCH topology.  This
+#: is the ONE hand-maintained table: `repro.topo.spec.zoo_specs()` parses
+#: it, `repro.cache.sweep.sweep_registry()` builds from it, BENCH row names
+#: are its keys, and degraded/failed variants get their canonical
+#: spec-derived display names from the transform suffixes.
+ZOO_SPECS: Dict[str, str] = {
+    "fig1a": "fig1a",
+    "fig1a_degraded": "two_cluster:4,10,2@degrade(0-8,cap=1)",
+    "ring8": "ring:8",
+    "bring8": "bring:8",
+    "bring8_degraded": "bring:8,cap=2@degrade(0-1,cap=1)",
+    "line6": "line:6",
+    "torus4x4": "torus2d:4x4",
+    "torus3x3_failed": "torus2d:3x3@fail(0-1)",
+    "hypercube3": "hypercube:3",
+    "hypercube3_failed": "hypercube:3@fail(0-1)",
+    "bcube2": "bcube:2",
+    "bcube3": "bcube:3",
+    "meshdgx2x2": "meshdgx:2x2x2",
+    "meshdgx2x2_degraded": "meshdgx:2x2x2,dcn_cap=2@degrade(8-9,cap=1)",
+    "fattree": "fattree",
+    "dragonfly": "dragonfly",
+    "dgx8": "dgx:8",
+    "star8": "star:8",
+    "two_cluster_3x6": "two_cluster:3,6,2",
+    "multipod": "multipod:2x4",
+    # scaled-up rows: the split/pack hot paths dominate even harder here
+    # (64 compute nodes, multi-switch fabrics) — these are the rows the
+    # warm-started oracle engine is proven on
+    "torus8x8": "torus2d:8x8",
+    "torus8x8_failed": "torus2d:8x8@fail(0-1)",
+    "fattree8p4l2h": "fattree:8p4l2h",
+    "fattree8p4l2h_degraded": "fattree:8p4l2h,host_cap=2@degrade(0-64,cap=1)",
+    "dragonfly6x4": "dragonfly:g6,p4",
+    "dragonfly6x4_degraded": "dragonfly:g6,p4@degrade(0-24,cap=2)",
+}

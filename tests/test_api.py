@@ -1,0 +1,233 @@
+"""The `Collectives` facade: byte-equivalence with the low-level compilers,
+cache-first behaviour, option merging, lowering, and the deprecation shims
+(the ONLY tests allowed to trigger `ReproDeprecationWarning` — tier-1
+promotes it to an error everywhere else)."""
+import dataclasses
+
+import pytest
+
+from repro.api import (Collectives, CompileOptions, KINDS,
+                       ReproDeprecationWarning)
+from repro.cache import ScheduleCache
+from repro.cache.serialize import allreduce_to_json, schedule_to_json
+from repro.core import (compile_allgather, compile_allreduce,
+                        compile_broadcast, compile_reduce,
+                        compile_reduce_scatter)
+from repro.topo import bidir_ring, fig1a, torus_2d
+
+
+def art_bytes(art):
+    from repro.core.schedule import AllReduceSchedule
+    return (allreduce_to_json(art) if isinstance(art, AllReduceSchedule)
+            else schedule_to_json(art))
+
+
+# ---------------------------------------------------------------------- #
+# CompileOptions
+# ---------------------------------------------------------------------- #
+
+def test_compile_options_validation():
+    with pytest.raises(ValueError):
+        CompileOptions(kind="alltoall")
+    with pytest.raises(ValueError):
+        CompileOptions(kind="broadcast", fixed_k=2)
+    o = CompileOptions(kind="allgather", num_chunks=16)
+    assert o.replace(num_chunks=4).num_chunks == 4
+    assert o.replace(num_chunks=4) is not o
+    assert o.resolved_root(fig1a()) is None
+    assert CompileOptions(kind="broadcast").resolved_root(fig1a()) == 0
+    assert CompileOptions(kind="reduce", root=3).resolved_root(fig1a()) == 3
+
+
+def test_facade_defaults_and_overrides():
+    coll = Collectives(num_chunks=4, kind="reduce_scatter")
+    assert coll.opts().num_chunks == 4
+    assert coll.opts(num_chunks=8).num_chunks == 8
+    assert coll.opts().kind == "reduce_scatter"
+    with pytest.raises(TypeError):
+        Collectives(options=CompileOptions(), num_chunks=4)
+
+
+# ---------------------------------------------------------------------- #
+# schedule/family equivalence with the low-level compilers
+# ---------------------------------------------------------------------- #
+
+def test_schedule_matches_low_level_compilers():
+    g = fig1a()
+    coll = Collectives(num_chunks=8)
+    pairs = [
+        ("allgather", compile_allgather(g, num_chunks=8)),
+        ("reduce_scatter", compile_reduce_scatter(g, num_chunks=8)),
+        ("broadcast", compile_broadcast(g, root=0, num_chunks=8)),
+        ("reduce", compile_reduce(g, root=0, num_chunks=8)),
+        ("allreduce", compile_allreduce(g, num_chunks=8)),
+    ]
+    for kind, want in pairs:
+        got = coll.schedule(g, kind=kind)
+        assert art_bytes(got) == art_bytes(want), kind
+
+
+def test_schedule_accepts_spec_strings_and_zoo_names():
+    coll = Collectives(num_chunks=4)
+    a = coll.schedule("torus4x4")
+    b = coll.schedule("torus2d:4x4")
+    c = coll.schedule(torus_2d(4, 4))
+    assert art_bytes(a) == art_bytes(b) == art_bytes(c)
+
+
+def test_family_and_pair():
+    g = bidir_ring(6)
+    coll = Collectives(num_chunks=4)
+    fam = coll.family(g, kinds=("allgather", "reduce_scatter", "allreduce"))
+    assert set(fam) == {"allgather", "reduce_scatter", "allreduce"}
+    assert art_bytes(fam["allgather"]) == \
+        art_bytes(compile_allgather(g, num_chunks=4))
+    ag, rs = coll.pair(g)
+    assert ag.kind == "allgather" and rs.kind == "reduce_scatter"
+    timings = {}
+    coll.family(g, kinds=("allgather",), timings=timings)
+    assert "allgather" in timings
+
+
+# ---------------------------------------------------------------------- #
+# cache behaviour
+# ---------------------------------------------------------------------- #
+
+def test_cache_path_hits_skip_compiler(tmp_path, monkeypatch):
+    coll = Collectives(cache=str(tmp_path), num_chunks=4)
+    assert isinstance(coll.cache, ScheduleCache)
+    first = coll.schedule("bring:6")
+    monkeypatch.setattr("repro.core.schedule.compile_allgather",
+                        lambda *a, **kw: pytest.fail("compiler on hit path"))
+    again = Collectives(cache=str(tmp_path), num_chunks=4).schedule("bring:6")
+    assert art_bytes(again) == art_bytes(first)
+
+
+def test_cache_instance_passthrough_and_verify_inheritance(tmp_path):
+    cache = ScheduleCache(tmp_path)
+    coll = Collectives(cache=cache)
+    assert coll.cache is cache
+    assert Collectives(cache=str(tmp_path),
+                       verify=True).cache.verify_on_compile
+    assert Collectives(cache=None).cache is None
+    assert Collectives(cache="").cache is None
+
+
+# ---------------------------------------------------------------------- #
+# lowering / programs / executables
+# ---------------------------------------------------------------------- #
+
+def test_program_kinds():
+    coll = Collectives(num_chunks=4)
+    prog = coll.program("bring:6", kind="allgather")
+    assert prog.kind == "allgather"
+    rs_p, ag_p = coll.program("bring:6", kind="allreduce")
+    assert rs_p.kind == "reduce_scatter" and ag_p.kind == "allgather"
+    bc = coll.program("star:4", kind="broadcast", root=2)
+    assert bc.kind == "broadcast" and bc.root == 2
+
+
+def test_executable_binds_tree_collectives():
+    coll = Collectives(num_chunks=4)
+    fn = coll.executable("bring:4", kind="allreduce", axis_name="x")
+    assert callable(fn)
+    fn2 = coll.executable("bring:4", kind="allgather", axis_name="x")
+    assert callable(fn2) and fn2 is not fn
+
+
+# ---------------------------------------------------------------------- #
+# CollectiveContext on top of the facade
+# ---------------------------------------------------------------------- #
+
+def test_collective_context_spec_overrides():
+    from repro.comms import CollectiveContext
+    ctx = CollectiveContext({"data": 4}, num_chunks=4,
+                            topologies={"data": "bring:4"})
+    ax = ctx.axis("data")
+    assert ax.topology.name == "bring4"
+    assert ax.ag_prog.axis_size == 4
+
+
+def test_collective_context_rejects_conflicting_knobs(tmp_path):
+    from repro.comms import CollectiveContext
+    coll = Collectives(num_chunks=8)
+    with pytest.raises(TypeError):
+        CollectiveContext({"data": 4}, num_chunks=32, collectives=coll)
+    with pytest.raises(TypeError):
+        CollectiveContext({"data": 4}, fixed_k=1, collectives=coll)
+
+
+def test_cache_miss_honors_per_call_verify(tmp_path, monkeypatch):
+    import repro.core.schedule as schedule_mod
+    seen = {}
+    real = schedule_mod.compile_allgather
+
+    def spy(*a, **kw):
+        seen["verify"] = kw.get("verify")
+        return real(*a, **kw)
+
+    monkeypatch.setattr("repro.core.schedule.compile_allgather", spy)
+    coll = Collectives(cache=str(tmp_path), num_chunks=4)
+    assert not coll.cache.verify_on_compile
+    coll.schedule("bring:6", verify=True)     # miss path must verify
+    assert seen["verify"] is True
+    assert not coll.cache.verify_on_compile   # flag restored
+
+
+def test_collective_context_shares_facade(tmp_path):
+    from repro.comms import CollectiveContext
+    coll = Collectives(cache=str(tmp_path), num_chunks=4)
+    ctx = CollectiveContext({"data": 4}, collectives=coll)
+    assert ctx.schedule_cache is coll.cache
+    assert ctx.num_chunks == 4
+    ctx.axis("data")
+    assert coll.cache.stats.puts >= 2   # AG + RS artifacts persisted
+    with pytest.raises(TypeError):
+        CollectiveContext({"data": 4}, collectives=coll,
+                          schedule_cache=ScheduleCache(tmp_path))
+
+
+# ---------------------------------------------------------------------- #
+# deprecation shims — pinned here, errors everywhere else
+# ---------------------------------------------------------------------- #
+
+def test_schedules_for_topology_shim_warns_and_matches_facade():
+    from repro.comms import schedules_for_topology
+    g = bidir_ring(6)
+    with pytest.warns(ReproDeprecationWarning):
+        ag, rs = schedules_for_topology(g, num_chunks=4)
+    want_ag, want_rs = Collectives(num_chunks=4).pair(g)
+    assert art_bytes(ag) == art_bytes(want_ag)
+    assert art_bytes(rs) == art_bytes(want_rs)
+    with pytest.warns(ReproDeprecationWarning):
+        ar = schedules_for_topology(g, num_chunks=4, kind="allreduce")
+    assert art_bytes(ar) == art_bytes(
+        Collectives(num_chunks=4).schedule(g, kind="allreduce"))
+    with pytest.warns(ReproDeprecationWarning):
+        with pytest.raises(ValueError):
+            schedules_for_topology(g, num_chunks=4, kind="broadcast")
+    with pytest.warns(ReproDeprecationWarning):
+        with pytest.raises(ValueError):
+            schedules_for_topology(g, num_chunks=4, kind="alltoall")
+
+
+def test_programs_for_topology_shim_warns_and_matches_facade():
+    from repro.comms import programs_for_topology
+    g = bidir_ring(6)
+    with pytest.warns(ReproDeprecationWarning):
+        rs_p, ag_p = programs_for_topology(g, num_chunks=4)
+    assert rs_p.kind == "reduce_scatter" and ag_p.kind == "allgather"
+
+
+def test_deprecation_gate_is_configured():
+    """tier-1 must promote ReproDeprecationWarning to an error: the
+    pyproject filterwarnings entry is the CI deprecation gate."""
+    from pathlib import Path
+    text = (Path(__file__).resolve().parent.parent
+            / "pyproject.toml").read_text()
+    assert "error::repro.api.ReproDeprecationWarning" in text
+
+
+def test_kinds_constant_matches_cache_sweep():
+    from repro.cache import COLLECTIVES
+    assert tuple(KINDS) == tuple(COLLECTIVES)

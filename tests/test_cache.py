@@ -183,14 +183,18 @@ def test_cache_allreduce_and_broadcast(tmp_path):
 
 
 def test_executor_consults_cache(tmp_path, monkeypatch):
-    from repro.comms import programs_for_topology
+    from repro.api import Collectives
     g = ring(4)
-    rs1, ag1 = programs_for_topology(g, num_chunks=4,
-                                     cache=ScheduleCache(tmp_path))
+
+    def pair_programs(cache):
+        ag, rs = Collectives(cache=cache, num_chunks=4).pair(g)
+        from repro.comms import compile_program
+        return compile_program(rs), compile_program(ag)
+
+    rs1, ag1 = pair_programs(ScheduleCache(tmp_path))
     monkeypatch.setattr("repro.core.schedule.compile_allgather",
                         lambda *a, **kw: pytest.fail("compiler on hit path"))
-    rs2, ag2 = programs_for_topology(g, num_chunks=4,
-                                     cache=ScheduleCache(tmp_path))
+    rs2, ag2 = pair_programs(ScheduleCache(tmp_path))
 
     def sig(prog):
         return [(c.perm, c.width, c.send_slots.tolist(),

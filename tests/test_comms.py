@@ -107,19 +107,18 @@ def test_bucketed_allreduce_from_cached_artifact():
         except ImportError:  # older jax: experimental namespace
             from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
-        from repro.topo import bidir_ring
+        from repro.api import Collectives
         from repro.cache import ScheduleCache
-        from repro.comms import (BucketedAllReduce, schedules_for_topology)
+        from repro.comms import BucketedAllReduce
 
         mesh = Mesh(np.array(jax.devices()), ('x',))
         cache_dir = tempfile.mkdtemp()
-        ar = schedules_for_topology(bidir_ring(8), num_chunks=4,
-                                    cache=ScheduleCache(cache_dir),
-                                    kind='allreduce')
+        ar = Collectives(cache=cache_dir, num_chunks=4).schedule(
+            'bring:8', kind='allreduce')
         # replay the single artifact from a fresh cache (no recompilation)
         cache = ScheduleCache(cache_dir)
-        ar2 = schedules_for_topology(bidir_ring(8), num_chunks=4,
-                                     cache=cache, kind='allreduce')
+        ar2 = Collectives(cache=cache, num_chunks=4).schedule(
+            'bring:8', kind='allreduce')
         assert cache.stats.hits == 1 and cache.stats.misses == 0
         assert ar2.claimed_runtime == ar.claimed_runtime
         red = BucketedAllReduce.from_schedule(ar2, axis_name='x',

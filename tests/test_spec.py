@@ -1,0 +1,269 @@
+"""TopologySpec: grammar round-trips, JSON round-trips, registry
+equivalence (spec-built graphs are byte-identical to the legacy hand-rolled
+builders), canonical transform-derived names, and error behaviour."""
+import json
+import random
+
+import pytest
+
+from repro.core.graph import DiGraph
+from repro.topo import (TopologySpec, TopologySpecError, TransformSpec,
+                        bcube, bidir_ring, degrade_link, dgx_box, dragonfly,
+                        fail_link, fat_tree, fig1a, hypercube, line,
+                        mesh_of_dgx, multipod_topology, resolve_topology,
+                        ring, star_switch, topology_families, torus_2d,
+                        two_cluster_switch, zoo_specs)
+
+# ---------------------------------------------------------------------- #
+# registry equivalence: every committed zoo entry, spec vs legacy builder
+# ---------------------------------------------------------------------- #
+
+# The pre-spec sweep_registry() builders, inlined verbatim: the committed
+# ZOO_SPECS table must reproduce every one of these byte-for-byte
+# (fingerprints exclude display names, so cache keys cannot move).
+LEGACY_REGISTRY = {
+    "fig1a": fig1a,
+    "fig1a_degraded": lambda: degrade_link(
+        two_cluster_switch(4, 10, 2), 0, 8, 1, name="fig1a-deg"),
+    "ring8": lambda: ring(8),
+    "bring8": lambda: bidir_ring(8),
+    "bring8_degraded": lambda: degrade_link(bidir_ring(8, cap=2), 0, 1, 1),
+    "line6": lambda: line(6),
+    "torus4x4": lambda: torus_2d(4, 4),
+    "torus3x3_failed": lambda: fail_link(torus_2d(3, 3), 0, 1),
+    "hypercube3": lambda: hypercube(3),
+    "hypercube3_failed": lambda: fail_link(hypercube(3), 0, 1),
+    "bcube2": lambda: bcube(2),
+    "bcube3": lambda: bcube(3),
+    "meshdgx2x2": lambda: mesh_of_dgx(2, 2, 2),
+    "meshdgx2x2_degraded": lambda: degrade_link(
+        mesh_of_dgx(2, 2, 2, nvlink_cap=4, dcn_cap=2), 8, 9, 1),
+    "fattree": fat_tree,
+    "dragonfly": dragonfly,
+    "dgx8": dgx_box,
+    "star8": lambda: star_switch(8),
+    "two_cluster_3x6": lambda: two_cluster_switch(3, 6, 2),
+    "multipod": lambda: multipod_topology(2, 4, 10, 1),
+    "torus8x8": lambda: torus_2d(8, 8),
+    "torus8x8_failed": lambda: fail_link(torus_2d(8, 8), 0, 1),
+    "fattree8p4l2h": lambda: fat_tree(8, 4, 2),
+    "fattree8p4l2h_degraded": lambda: degrade_link(
+        fat_tree(8, 4, 2, host_cap=2), 0, 64, 1),
+    "dragonfly6x4": lambda: dragonfly(6, 4, 4, 1),
+    "dragonfly6x4_degraded": lambda: degrade_link(
+        dragonfly(6, 4, 4, 1), 0, 24, 2),
+}
+
+
+def test_zoo_specs_cover_legacy_registry_exactly():
+    assert list(zoo_specs()) == list(LEGACY_REGISTRY)
+
+
+@pytest.mark.parametrize("name", sorted(LEGACY_REGISTRY))
+def test_spec_fingerprint_matches_legacy_builder(name):
+    spec = zoo_specs()[name]
+    built, legacy = spec.build(), LEGACY_REGISTRY[name]()
+    assert built.fingerprint() == legacy.fingerprint()
+    assert built.canonical_form() == legacy.canonical_form()
+
+
+def test_sweep_registry_derives_from_zoo_specs():
+    from repro.cache import sweep_registry
+    reg = sweep_registry()
+    assert list(reg) == list(zoo_specs())
+    g = reg["torus4x4"]()
+    assert g.fingerprint() == torus_2d(4, 4).fingerprint()
+
+
+# ---------------------------------------------------------------------- #
+# grammar: parse / print round-trips
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("text", sorted(
+    {str(s) for s in zoo_specs().values()}))
+def test_zoo_spec_string_round_trip(text):
+    spec = TopologySpec.parse(text)
+    assert str(spec) == text
+    assert TopologySpec.parse(str(spec)) == spec
+
+
+def test_compact_and_generic_forms_parse_identically():
+    assert TopologySpec.parse("torus2d:8x8") == \
+        TopologySpec.parse("torus2d:cols=8,rows=8")
+    assert TopologySpec.parse("dragonfly:g6,p4") == \
+        TopologySpec.parse("dragonfly:groups=6,per_group=4")
+    assert TopologySpec.parse("fattree:8p4l2h") == \
+        TopologySpec.parse(
+            "fattree:hosts_per_leaf=2,leaf_per_pod=4,pods=8")
+    # compact prefix + generic extras
+    assert TopologySpec.parse("torus2d:4x4,cap=2") == \
+        TopologySpec.parse("torus2d:cap=2,cols=4,rows=4")
+
+
+def test_bool_params_round_trip():
+    spec = TopologySpec.parse("torus2d:3x4,wrap=false")
+    assert dict(spec.params)["wrap"] is False
+    assert str(spec) == "torus2d:3x4,wrap=false"
+    assert spec.build().fingerprint() == \
+        torus_2d(3, 4, wrap=False).fingerprint()
+
+
+def _random_spec(rng: random.Random) -> TopologySpec:
+    """A random well-formed spec over a few families (small sizes only so
+    the occasional .build() stays cheap)."""
+    choices = [
+        ("ring", {"n": rng.randint(2, 9), "cap": rng.randint(1, 3)}),
+        ("bring", {"n": rng.randint(2, 8)}),
+        ("torus2d", {"rows": rng.randint(2, 4), "cols": rng.randint(2, 4),
+                     "wrap": rng.random() < 0.5}),
+        ("dragonfly", {"groups": rng.randint(2, 4),
+                       "per_group": rng.randint(1, 3),
+                       "local_cap": rng.randint(1, 5)}),
+        ("fattree", {"pods": rng.randint(2, 4),
+                     "leaf_per_pod": rng.randint(1, 3),
+                     "hosts_per_leaf": rng.randint(1, 3)}),
+        ("two_cluster", {"per_cluster": rng.randint(2, 4),
+                         "local_cap": rng.randint(2, 10),
+                         "global_cap": rng.randint(1, 2)}),
+        ("star", {"n": rng.randint(2, 8)}),
+    ]
+    family, params = rng.choice(choices)
+    # randomly drop optional params (required ones must stay)
+    fam = topology_families()[family]
+    keep = {k: v for k, v in params.items()
+            if k in fam.required or rng.random() < 0.7}
+    spec = TopologySpec(family=family, params=tuple(keep.items()))
+    if rng.random() < 0.4:
+        spec = spec.fail(rng.randint(0, 3), rng.randint(4, 7))
+    if rng.random() < 0.4:
+        spec = spec.degrade(rng.randint(0, 3), rng.randint(4, 7),
+                            cap=rng.randint(1, 3))
+    return spec
+
+
+def test_random_specs_round_trip_seeded():
+    rng = random.Random(0)
+    for _ in range(200):
+        spec = _random_spec(rng)
+        assert TopologySpec.parse(str(spec)) == spec, str(spec)
+        assert TopologySpec.from_json(spec.to_json()) == spec, str(spec)
+
+
+def test_random_specs_round_trip_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=150, deadline=None)
+    @hypothesis.given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+    def check(seed):
+        spec = _random_spec(random.Random(seed))
+        assert TopologySpec.parse(str(spec)) == spec
+        assert TopologySpec.from_json(spec.to_json()) == spec
+
+    check()
+
+
+# ---------------------------------------------------------------------- #
+# JSON payloads
+# ---------------------------------------------------------------------- #
+
+def test_json_payload_shape_and_stability():
+    spec = TopologySpec.parse("meshdgx:2x2x2,dcn_cap=2@degrade(8-9,cap=1)")
+    payload = json.loads(spec.to_json())
+    assert payload["format"] == "repro.topology_spec"
+    assert payload["family"] == "meshdgx"
+    assert payload["params"] == {"rows": 2, "cols": 2, "gpus": 2,
+                                 "dcn_cap": 2}
+    assert payload["transforms"] == [
+        {"name": "degrade", "args": [8, 9], "kwargs": {"cap": 1}}]
+    # JSON -> spec -> JSON is stable
+    again = TopologySpec.from_json(spec.to_json())
+    assert again.to_json() == spec.to_json()
+    assert again.build().fingerprint() == spec.build().fingerprint()
+
+
+def test_json_rejects_foreign_payloads():
+    with pytest.raises(TopologySpecError):
+        TopologySpec.from_dict({"format": "something.else", "family": "ring"})
+    with pytest.raises(TopologySpecError):
+        TopologySpec.from_json("not json at all")
+
+
+# ---------------------------------------------------------------------- #
+# transforms + canonical names
+# ---------------------------------------------------------------------- #
+
+def test_transform_sugar_equals_parsed():
+    base = TopologySpec.parse("torus2d:3x3")
+    assert base.fail(0, 1) == TopologySpec.parse("torus2d:3x3@fail(0-1)")
+    assert base.degrade(0, 1, cap=1) == \
+        TopologySpec.parse("torus2d:3x3@degrade(0-1,cap=1)")
+    chained = TopologySpec.parse(
+        "torus2d:4x4,cap=2@degrade(0-1,cap=1)@fail(1-2)")
+    assert chained.transforms == (
+        TransformSpec("degrade", (0, 1), (("cap", 1),)),
+        TransformSpec("fail", (1, 2)))
+    assert chained.build().fingerprint() == fail_link(
+        degrade_link(torus_2d(4, 4, cap=2), 0, 1, 1), 1, 2).fingerprint()
+
+
+def test_degraded_variants_get_canonical_spec_names():
+    assert fail_link(torus_2d(3, 3), 0, 1).name == "torus3x3@fail(0-1)"
+    assert degrade_link(bidir_ring(8, cap=2), 0, 1, 1).name == \
+        "bring8@degrade(0-1,cap=1)"
+    # the spec build carries the same canonical name
+    assert TopologySpec.parse("torus2d:3x3@fail(0-1)").build().name == \
+        "torus3x3@fail(0-1)"
+    # explicit name= still overrides (external compatibility)
+    assert fail_link(torus_2d(3, 3), 0, 1, name="custom").name == "custom"
+
+
+# ---------------------------------------------------------------------- #
+# resolution + errors
+# ---------------------------------------------------------------------- #
+
+def test_resolve_topology_accepts_all_forms():
+    g = torus_2d(4, 4)
+    assert resolve_topology(g) is g
+    assert resolve_topology("torus4x4").fingerprint() == g.fingerprint()
+    assert resolve_topology("torus2d:4x4").fingerprint() == g.fingerprint()
+    assert resolve_topology(
+        TopologySpec.parse("torus2d:4x4")).fingerprint() == g.fingerprint()
+    with pytest.raises(TypeError):
+        resolve_topology(123)
+
+
+@pytest.mark.parametrize("bad", [
+    "ring",                     # required parameter n missing
+    "nosuchfamily:3",
+    "ring:8,bogus=1",
+    "ring:8@nosuchtransform(0-1)",
+    "ring:",
+    "ring:n=x",
+    "torus2d:8x8,wrap=maybe",
+    "ring:8@fail(a-b)",
+    "@fail(0-1)",
+    "ring:n=1,n=2",
+])
+def test_malformed_specs_raise(bad):
+    with pytest.raises(TopologySpecError):
+        TopologySpec.parse(bad)
+
+
+def test_missing_required_param_raises_at_build():
+    with pytest.raises(TopologySpecError):
+        TopologySpec(family="ring").build()    # n is required
+
+
+def test_every_family_registered_with_valid_metadata():
+    fams = topology_families()
+    # the paper families all registered
+    for expected in ("ring", "bring", "line", "full", "torus2d", "torus3d",
+                     "hypercube", "star", "two_cluster", "fig1a", "fig1d",
+                     "fattree", "dragonfly", "dgx", "bcube", "meshdgx",
+                     "multipod", "v5e"):
+        assert expected in fams, expected
+    for fam in fams.values():
+        assert "name" not in fam.param_names
+        for f in fam.pattern_fields:
+            assert f in fam.param_names

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs-drift checker (run in CI and by tests/test_docs.py).
 
-Three independent checks over the documentation suite:
+Four independent checks over the documentation suite:
 
 1. **Links** — every relative markdown link in README.md, docs/*.md,
    src/repro/cache/README.md and ROADMAP.md resolves to an existing file
@@ -17,7 +17,16 @@ Three independent checks over the documentation suite:
 3. **Module paths** — every `src/repro/...*.py` and `tests/golden/*.json`
    path named in docs/ALGORITHM.md must exist, and every `(`symbol`, ...)`
    list following a module path must resolve via getattr on the imported
-   module — the paper-construction table cannot rot silently.
+   module — the paper-construction table cannot rot silently (this is how
+   the `repro.api` / `repro.topo.spec` entry-point map stays honest).
+
+4. **Deprecation gate** — no in-repo caller (src/, examples/, tools/,
+   benchmarks/) may reference the deprecated module-level entry points
+   (`schedules_for_topology` / `programs_for_topology`); everything routes
+   through `repro.api.Collectives` + `repro.topo.spec.TopologySpec`.  Only
+   the shim module itself (and its package re-export, kept for external
+   callers) is exempt.  Complements the tier-1 runtime gate
+   (`ReproDeprecationWarning` promoted to error in pyproject.toml).
 
 Exit code 0 = clean; non-zero prints every violation.
 """
@@ -132,12 +141,44 @@ def check_module_paths() -> list:
     return errors
 
 
+DEPRECATED_ENTRY_POINTS = ("schedules_for_topology", "programs_for_topology")
+#: files that may name the deprecated entry points: the shim module that
+#: defines them, the package __init__ that re-exports them for external
+#: callers, and this checker
+DEPRECATION_ALLOWED = {
+    "src/repro/api.py",             # the facade documents what it replaces
+    "src/repro/comms/executor.py",
+    "src/repro/comms/__init__.py",
+    "tools/check_docs.py",
+}
+
+
+def check_deprecated_imports() -> list:
+    errors = []
+    pat = re.compile(r"\b(" + "|".join(DEPRECATED_ENTRY_POINTS) + r")\b")
+    for root in ("src", "examples", "tools", "benchmarks"):
+        for f in sorted((REPO / root).rglob("*.py")):
+            rel = str(f.relative_to(REPO))
+            if rel in DEPRECATION_ALLOWED:
+                continue
+            for i, line in enumerate(f.read_text().splitlines(), 1):
+                m = pat.search(line)
+                if m:
+                    errors.append(
+                        f"{rel}:{i}: references deprecated entry point "
+                        f"{m.group(1)!r} — route through "
+                        f"repro.api.Collectives instead")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_flags() + check_module_paths()
+    errors = (check_links() + check_flags() + check_module_paths()
+              + check_deprecated_imports())
     for e in errors:
         print(f"DOCS-DRIFT: {e}", file=sys.stderr)
     if not errors:
-        print("docs check: links, CLI flags, and module paths all consistent")
+        print("docs check: links, CLI flags, module paths, and the "
+              "deprecation gate all consistent")
     return 1 if errors else 0
 
 
