@@ -208,6 +208,58 @@ class Collectives:
         return fam["allgather"], fam["reduce_scatter"]
 
     # -------------------------------------------------------------- #
+    # online repair
+    # -------------------------------------------------------------- #
+
+    def repair(self, artifact: Union[Artifact, SpecLike], transform,
+               opts: Optional[CompileOptions] = None, *,
+               use_cache: bool = True, verify: bool = True,
+               **overrides: Any) -> Tuple[Artifact, Any]:
+        """Delta-recompile a compiled artifact for a degraded topology.
+
+        ``artifact`` is a compiled `PipelineSchedule` / `AllReduceSchedule`
+        (the fast path: its warm oracle state may still be resident), or
+        any topology form — then the base schedule is acquired first via
+        `schedule()` with the usual options.  ``transform`` is a
+        `repro.topo.spec.TransformSpec` or its text form (``"@fail(0-1)"``,
+        ``"@degrade(2-3,cap=1)"``).
+
+        Returns ``(repaired_artifact, RepairReport)``.  The repaired
+        artifact is byte-identical to cold-compiling the transformed
+        topology and is re-verified on the degraded graph.  With a cache
+        attached, the result is stored under its natural degraded-topology
+        key plus a transform-keyed ``.repair`` sidecar (schema v5), so the
+        same (base, transform) repair replays without compiling; the
+        replayed report carries ``cached=True`` and the *original* repair
+        wall time.  ``verify=True`` (the default — repair is an online
+        safety path) replays every chunk of the repaired schedule through
+        the simulator's correctness checker on the degraded graph."""
+        from repro.core.repair import (RepairError, RepairReport,
+                                       repair_artifact)
+        from repro.topo.spec import TransformSpec
+        spec = (transform if isinstance(transform, TransformSpec)
+                else TransformSpec.parse_text(transform))
+        if self.opts(opts, **overrides).fixed_k is not None:
+            raise RepairError(
+                "repair requires automatic k: the §2.4 fixed-k floor is "
+                "not recorded on artifacts and its floor-scaled capacities "
+                "do not delta-compose — recompile the degraded topology "
+                "cold instead")
+        if not isinstance(artifact, (PipelineSchedule, AllReduceSchedule)):
+            artifact = self.schedule(artifact, opts, **overrides)
+        if self.cache is not None and use_cache:
+            hit = self.cache.repaired(artifact, spec)
+            if hit is not None:
+                art, meta = hit
+                report = RepairReport.from_dict(meta["report"])
+                report.cached = True
+                return art, report
+        repaired, report = repair_artifact(artifact, spec, verify=verify)
+        if self.cache is not None and use_cache:
+            self.cache.put_repaired(artifact, spec, repaired, report)
+        return repaired, report
+
+    # -------------------------------------------------------------- #
     # lowered programs / executables
     # -------------------------------------------------------------- #
 

@@ -38,6 +38,7 @@ _COMPILER_MODULES = (
     "repro.core.fixed_k",
     "repro.core.schedule",
     "repro.core.plan",
+    "repro.core.repair",
     "repro.core.simulate",
 )
 
@@ -70,6 +71,35 @@ def schedule_cache_key(kind: str, topo: DiGraph, num_chunks: int,
     """Filename-safe key identifying one compiled artifact."""
     parts = [kind, topo.fingerprint(), f"p{num_chunks}",
              f"k{fixed_k if fixed_k is not None else 'auto'}"]
+    if root is not None:
+        parts.append(f"r{root}")
+    parts.append(compiler_fp or compiler_fingerprint())
+    return "-".join(parts)
+
+
+def transform_slug(transform) -> str:
+    """Filename-safe token for a `TransformSpec` — ``@degrade(0-8,cap=1)``
+    becomes ``degrade.0-8.cap=1`` — stable across processes because
+    `TransformSpec.__str__` is canonical (sorted kwargs)."""
+    import re
+
+    return re.sub(r"[^A-Za-z0-9.=_-]+", ".", str(transform).lstrip("@")).strip(".")
+
+
+def repair_cache_key(kind: str, base_topo: DiGraph, transform,
+                     num_chunks: int, fixed_k: Optional[int] = None,
+                     root: Optional[int] = None,
+                     compiler_fp: Optional[str] = None) -> str:
+    """Key for the `.repair` sidecar of one repaired artifact.
+
+    Keyed by the *base* (pre-fault) graph fingerprint plus the transform —
+    not by the degraded graph — so an online repair path can look up "base
+    artifact X under fault Y" without first building the degraded topology.
+    The sidecar then points at the repaired artifact, which lives under its
+    natural degraded-topology `schedule_cache_key`.
+    """
+    parts = ["repair", kind, base_topo.fingerprint(), transform_slug(transform),
+             f"p{num_chunks}", f"k{fixed_k if fixed_k is not None else 'auto'}"]
     if root is not None:
         parts.append(f"r{root}")
     parts.append(compiler_fp or compiler_fingerprint())

@@ -36,11 +36,16 @@ from .fingerprint import FORMAT_VERSION
 SCHEDULE_FORMAT = "repro.schedule"
 ALLREDUCE_FORMAT = "repro.allreduce"
 STATS_FORMAT = "repro.compile_stats"
+REPAIR_FORMAT = "repro.repair"
 # Version of the *cache directory* schema (artifact payloads stay at
 # FORMAT_VERSION): v3 adds the per-artifact compile-stats sidecar and the
-# flock-guarded index.  v3 readers accept v2 directories (no sidecar → no
-# stats) — the artifact payload format itself is unchanged.
-CACHE_SCHEMA_VERSION = 3
+# flock-guarded index.  v5 adds transform-keyed `.repair` sidecars: a
+# repaired artifact is stored under its natural (degraded-topology) key,
+# and a `repair-...` sidecar keyed by base fingerprint + transform records
+# `repair_time_s` and points at that artifact.  Readers accept older
+# directories (no sidecar → no repair metadata) — the artifact payload
+# format itself is unchanged.
+CACHE_SCHEMA_VERSION = 5
 
 # every kind a `repro.schedule` payload may carry (allreduce artifacts are
 # the nested `repro.allreduce` format: an rs + an ag payload)

@@ -14,7 +14,7 @@ atomically (tmp + rename), return.
 An in-memory layer sits above the disk so repeated lookups inside one
 process don't even touch the filesystem.
 
-Cache schema v3 (artifact payloads stay at the v2 format):
+Cache schema v5 (artifact payloads stay at the v2 format):
 
 * each artifact gets a ``{key}.stats`` sidecar with the compiler's
   per-stage `CompileStats` (loaded back onto hits);
@@ -22,7 +22,16 @@ Cache schema v3 (artifact payloads stay at the v2 format):
   ``.lock`` and maintain an advisory ``.index`` JSON of resident entries,
   so concurrent writer processes never interleave an eviction scan with a
   write or corrupt the index.  Reads stay lock-free (renames are atomic).
-  Directories written by a v2 cache load fine — no sidecar means no stats.
+* repaired artifacts (v5) get a ``repair-...`` sidecar keyed by the *base*
+  graph fingerprint plus the transform text.  The sidecar records the
+  `RepairReport` (``repair_time_s`` et al.) and points at the repaired
+  artifact, which lives under its natural degraded-topology key — so a
+  later cold compile of the degraded spec hits the byte-identical repaired
+  entry, and a later repair of the same (base, transform) pair returns
+  without touching the compiler.  Dangling sidecars (artifact evicted)
+  degrade to a miss.
+  Directories written by an older cache load fine — no sidecar means no
+  stats / no repair metadata.
 """
 from __future__ import annotations
 
@@ -44,10 +53,12 @@ from repro.core import schedule as schedule_mod
 from repro.core.graph import DiGraph
 from repro.core.schedule import AllReduceSchedule, PipelineSchedule
 
-from .fingerprint import compiler_fingerprint, schedule_cache_key
-from .serialize import (CACHE_SCHEMA_VERSION, allreduce_from_json,
-                        allreduce_to_json, attach_stats, schedule_from_json,
-                        schedule_to_json, stats_to_payload)
+from .fingerprint import (compiler_fingerprint, repair_cache_key,
+                          schedule_cache_key)
+from .serialize import (CACHE_SCHEMA_VERSION, REPAIR_FORMAT,
+                        allreduce_from_json, allreduce_to_json, attach_stats,
+                        schedule_from_json, schedule_to_json,
+                        stats_to_payload)
 
 Artifact = Union[PipelineSchedule, AllReduceSchedule]
 
@@ -413,6 +424,73 @@ class ScheduleCache:
         return out
 
     # ------------------------------------------------------------------ #
+    # repaired artifacts (schema v5)
+    # ------------------------------------------------------------------ #
+
+    @staticmethod
+    def artifact_meta(art: Artifact) -> tuple:
+        """(kind, num_chunks, root) of an artifact — the key coordinates
+        shared by the base schedule and any repair of it."""
+        if isinstance(art, AllReduceSchedule):
+            return "allreduce", art.rs.num_chunks, None
+        return art.kind, art.num_chunks, art.root
+
+    def repair_key(self, base_art: Artifact, transform) -> str:
+        kind, num_chunks, root = self.artifact_meta(base_art)
+        return repair_cache_key(kind, base_art.topo, transform, num_chunks,
+                                root=root, compiler_fp=self.compiler_fp)
+
+    def repair_path_for(self, key: str) -> Path:
+        """The transform-keyed repair sidecar (no .json suffix, so artifact
+        globs and the LRU size accounting never see it)."""
+        return self.root / f"{key}.repair"
+
+    def repaired(self, base_art: Artifact, transform):
+        """Look up a cached repair of `base_art` under `transform`.
+
+        Returns ``(artifact, meta)`` on a hit — `meta` is the sidecar dict
+        whose ``report`` entry is the original `RepairReport.to_dict()` —
+        or ``None`` when there is no sidecar or the artifact it points at
+        has been evicted."""
+        rkey = self.repair_key(base_art, transform)
+        path = self.repair_path_for(rkey)
+        try:
+            meta = json.loads(path.read_text())
+        except (OSError, ValueError):
+            return None
+        if meta.get("format") != REPAIR_FORMAT:
+            return None
+        kind = meta.get("kind")
+        art = self._load(meta.get("artifact_key", ""),
+                         allreduce=kind == "allreduce")
+        if art is None:
+            return None
+        return art, meta
+
+    def put_repaired(self, base_art: Artifact, transform,
+                     repaired_art: Artifact, report) -> str:
+        """Store a repaired artifact plus its transform-keyed sidecar.
+
+        The artifact itself goes under its natural degraded-topology key
+        (`_store`), so ordinary `schedule()` lookups of the degraded spec
+        hit it too; the sidecar ties (base fingerprint, transform) to that
+        key and carries the repair report.  Returns the sidecar key."""
+        kind, num_chunks, root = self.artifact_meta(base_art)
+        akey = self.key(kind, repaired_art.topo, num_chunks,
+                        root=None if root is None else repaired_art.root)
+        self._store(akey, repaired_art)
+        rkey = self.repair_key(base_art, transform)
+        doc = {"format": REPAIR_FORMAT, "version": CACHE_SCHEMA_VERSION,
+               "kind": kind, "artifact_key": akey,
+               "base_fingerprint": base_art.topo.fingerprint(),
+               "transform": str(transform),
+               "report": report.to_dict() if report is not None else None}
+        with self._locked():
+            self._atomic_write(self.repair_path_for(rkey),
+                               json.dumps(doc, sort_keys=True) + "\n")
+        return rkey
+
+    # ------------------------------------------------------------------ #
     # maintenance
     # ------------------------------------------------------------------ #
 
@@ -429,6 +507,12 @@ class ScheduleCache:
                     self._unlink_entry(p.stem)
                     dropped.append(p.stem)
                     removed += 1
+            for p in self.root.glob("*.repair"):
+                if not p.stem.endswith(self.compiler_fp):
+                    try:
+                        p.unlink()
+                    except OSError:
+                        pass
             if dropped:
                 self._index_update(drop=dropped)
         return removed
@@ -436,7 +520,8 @@ class ScheduleCache:
     def clear(self) -> None:
         with self._locked():
             for p in list(self.root.glob("*.json")) + \
-                    list(self.root.glob("*.stats")):
+                    list(self.root.glob("*.stats")) + \
+                    list(self.root.glob("*.repair")):
                 try:
                     p.unlink()
                 except OSError:

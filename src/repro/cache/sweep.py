@@ -36,6 +36,15 @@ an artifact emitted from shared plan products reports the shared stages'
 times/counters (the work that *produced* it), which can exceed its own
 marginal ``compile_time_s``.
 
+``--repair`` (BENCH v5) adds a ``repair`` section: every swept row whose
+spec carries a transform (``*_failed`` / ``*_degraded`` zoo rows,
+transformed --topology specs) is *also* produced by online schedule repair
+(`repro.core.repair`) from its stripped base spec — the base compile warms
+the oracle store, the repair delta-recompiles from it — and byte-compared
+against the cold compile of the transformed spec.  Each row records
+``repair_time_s`` vs ``cold_compile_time_s``; any byte mismatch fails the
+sweep.
+
 ``--fixed-k K`` sweeps the §2.4 fixed-tree-count variant over the zoo
 (allgather family only — rooted kinds always use k = λ(root)); topologies
 where the floor-scaled graph can't be compiled for that k are reported in
@@ -80,7 +89,10 @@ from repro.topo.spec import TopologySpec, zoo_specs
 from .fingerprint import compiler_fingerprint
 
 BENCH_FORMAT = "repro.bench_schedules"
-BENCH_VERSION = 4
+# v5: adds the optional ``repair`` section (--repair): per (topology,
+# transform, kind) rows with ``repair_time_s`` vs ``cold_compile_time_s``
+# and the byte-identity verdict of the repaired artifact.
+BENCH_VERSION = 5
 SMOKE_NAMES = ("ring8", "hypercube3", "fig1a")
 # the scaled-up zoo rows (64-compute fabrics where split/pack dominate);
 # all of them are committed BENCH rows, and a full sweep document fed to
@@ -339,15 +351,96 @@ def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
     return rows
 
 
+def _repair_target(name: str):
+    """(base_spec, transform) of a transformed sweep row, or None for rows
+    without a (single) transform."""
+    import dataclasses
+    spec = zoo_specs().get(name)
+    if spec is None:
+        try:
+            spec = TopologySpec.parse(name)
+        except ValueError:
+            return None
+    if len(spec.transforms) != 1:
+        return None
+    return dataclasses.replace(spec, transforms=()), spec.transforms[0]
+
+
+def _repair_topology(name: str, kinds: Sequence[str],
+                     num_chunks: int) -> List[Dict[str, Any]]:
+    """BENCH v5 repair rows for one transformed zoo row: compile the
+    stripped base spec (warming the in-process oracle store), cold-compile
+    the transformed spec, then `repair_artifact` from the base — asserting
+    the repaired schedule is byte-identical to the cold compile and
+    recording ``repair_time_s`` vs ``cold_compile_time_s``."""
+    from repro.core.repair import RepairError, repair_artifact
+    from .serialize import allreduce_to_json, schedule_to_json
+    target = _repair_target(name)
+    if target is None:
+        return []
+    base_spec, transform = target
+    base_g = base_spec.build()
+    deg_g = _build_topology(name)
+    coll = Collectives(cache=None)
+    rows: List[Dict[str, Any]] = []
+    for kind in kinds:
+        root = min(base_g.compute) if kind in ("broadcast", "reduce") \
+            else None
+        base_art = coll.schedule(base_g, kind=kind, root=root,
+                                 num_chunks=num_chunks)
+        t0 = time.perf_counter()
+        cold_art = coll.schedule(deg_g, kind=kind, root=root,
+                                 num_chunks=num_chunks)
+        cold_s = time.perf_counter() - t0
+        row: Dict[str, Any] = {
+            "name": name, "kind": kind, "transform": str(transform),
+            "base_topology": base_g.name,
+            "cold_compile_time_s": round(cold_s, 6),
+        }
+        try:
+            rep_art, report = repair_artifact(base_art, transform,
+                                              verify=True)
+        except RepairError as e:
+            row["skipped"] = f"RepairError: {e}"
+            rows.append(row)
+            continue
+        to_json = allreduce_to_json if kind == "allreduce" \
+            else schedule_to_json
+        row.update({
+            "repair_time_s": round(report.repair_time_s, 6),
+            "speedup": round(cold_s / report.repair_time_s, 4)
+            if report.repair_time_s > 0 else None,
+            "warm_solve": report.warm_solve,
+            "warm_split": report.warm_split,
+            "solve_rounds": report.solve_rounds,
+            "bytes_equal": to_json(rep_art) == to_json(cold_art),
+        })
+        rows.append(row)
+    return rows
+
+
+def repair_mismatches(doc: Dict[str, Any]) -> List[str]:
+    """Repair rows whose repaired artifact is not byte-identical to the
+    cold compile of the transformed spec."""
+    return [f"{e['name']}:{e['kind']}" for e in doc.get("repair", ())
+            if "skipped" not in e and not e.get("bytes_equal")]
+
+
 def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
               jobs: Optional[int] = None, cache_dir: Optional[str] = None,
               out_path: Optional[str] = None,
               collectives: Optional[Sequence[str]] = None,
               fixed_k: Optional[int] = None,
-              topologies: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+              topologies: Optional[Sequence[str]] = None,
+              repair: bool = False) -> Dict[str, Any]:
     """Sweep the named zoo rows (default: all of them) plus any extra
     `topologies` given as raw spec strings (rows named by the canonical
-    spec form); `names` entries may themselves be spec strings."""
+    spec form); `names` entries may themselves be spec strings.
+
+    ``repair=True`` adds the BENCH v5 ``repair`` section: every swept row
+    with a transform is re-derived by online repair from its stripped base
+    spec and byte-compared against the cold compile (see
+    `_repair_topology`)."""
     names = list(names) if names is not None else (
         [] if topologies else list(sweep_registry()))
     for text in topologies or ():
@@ -368,6 +461,10 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
         if rooted:
             raise KeyError(f"--fixed-k does not apply to rooted kinds "
                            f"{rooted} (k = λ(root) there)")
+        if repair:
+            raise KeyError("--repair measures the automatic-k compiler "
+                           "(fixed-k artifacts don't delta-compose); "
+                           "drop --fixed-k")
     jobs = jobs if jobs is not None else min(len(names),
                                              max(1, (os.cpu_count() or 2)))
     if jobs <= 1 or len(names) <= 1:
@@ -385,6 +482,23 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
     order = lambda e: (e["name"], COLLECTIVES.index(e["kind"]))  # noqa: E731
     entries.sort(key=order)
     skipped.sort(key=order)
+    repair_rows: List[Dict[str, Any]] = []
+    if repair:
+        # fixed-k artifacts don't delta-compose (the floor isn't recorded),
+        # so the repair section always measures the automatic-k compiler
+        repair_kinds = [c for c in collectives]
+        targets = [n for n in names if _repair_target(n) is not None]
+        if jobs <= 1 or len(targets) <= 1:
+            rep_grouped = [_repair_topology(n, repair_kinds, num_chunks)
+                           for n in targets]
+        else:
+            with concurrent.futures.ProcessPoolExecutor(
+                    max_workers=jobs) as ex:
+                futs = [ex.submit(_repair_topology, n, repair_kinds,
+                                  num_chunks) for n in targets]
+                rep_grouped = [f.result() for f in futs]
+        repair_rows = sorted((e for rows in rep_grouped for e in rows),
+                             key=order)
     doc = {
         "format": BENCH_FORMAT,
         "version": BENCH_VERSION,
@@ -397,6 +511,8 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
         "entries": entries,
         "skipped": skipped,
     }
+    if repair:
+        doc["repair"] = repair_rows
     if out_path:
         with open(out_path, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -426,6 +542,13 @@ def build_parser() -> argparse.ArgumentParser:
                          f"(solve_fixed_k) with this k over {FIXED_K_COLLECTIVES}; "
                          "incompatible topologies land in the doc's "
                          "'skipped' list")
+    ap.add_argument("--repair", action="store_true",
+                    help="add the BENCH v5 repair section: every swept row "
+                         "with a transform is also produced by online "
+                         "repair from its stripped base spec "
+                         "(repro.core.repair), byte-compared against the "
+                         "cold compile, and timed (repair_time_s vs "
+                         "cold_compile_time_s)")
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--cache-dir", default=None)
     ap.add_argument("--out", default=None,
@@ -446,7 +569,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     doc = run_sweep(names=names, num_chunks=args.chunks, jobs=args.jobs,
                     cache_dir=args.cache_dir, out_path=args.out,
                     collectives=args.collectives, fixed_k=args.fixed_k,
-                    topologies=args.topology)
+                    topologies=args.topology, repair=args.repair)
     for e in doc["entries"]:
         print(f"{e['name']}.{e['kind']},{e['compile_time_s'] * 1e6:.1f},"
               f"inv_x*={e['inv_x_star']};k={e['k']};depth={e['depth']};"
@@ -455,9 +578,25 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               f"achieved/lb={e['achieved_over_lb_float']:.4f}", flush=True)
     for e in doc["skipped"]:
         print(f"{e['name']}.{e['kind']},skipped,{e['skipped']}", flush=True)
+    for e in doc.get("repair", ()):
+        if "skipped" in e:
+            print(f"repair {e['name']}.{e['kind']},skipped,{e['skipped']}",
+                  flush=True)
+        else:
+            print(f"repair {e['name']}.{e['kind']} {e['transform']}: "
+                  f"repair={e['repair_time_s'] * 1e3:.1f}ms "
+                  f"cold={e['cold_compile_time_s'] * 1e3:.1f}ms "
+                  f"speedup={e['speedup']}x "
+                  f"warm=(solve={e['warm_solve']},split={e['warm_split']}) "
+                  f"bytes_equal={e['bytes_equal']}", flush=True)
     bad = claim_mismatches(doc)
     if bad:
         print(f"FAIL: achieved != claimed for {bad}", file=sys.stderr)
+        return 1
+    bad_repair = repair_mismatches(doc)
+    if bad_repair:
+        print(f"FAIL: repaired bytes != cold compile for {bad_repair}",
+              file=sys.stderr)
         return 1
     print(f"wrote {args.out}: {doc['num_topologies']} topologies x "
           f"{len(doc['collectives'])} collectives = {doc['num_entries']} "

@@ -146,6 +146,83 @@ class CollectiveContext:
         return tuple((a, self.axis(a).rs_prog, self.axis(a).ag_prog)
                      for a in order)
 
+    def hot_swap(self, transform, axes: Optional[Sequence[str]] = None
+                 ) -> Dict[str, list]:
+        """Repair every compiled schedule of the axes a fabric transform
+        touches, and atomically swap the repaired programs in.
+
+        ``transform`` is a `repro.topo.spec.TransformSpec` or its text form
+        (``"@fail(0-1)"``, ``"@degrade(2-3,cap=1)"``); axes whose topology
+        does not carry the named link are left untouched.  Every memoized
+        artifact of an affected axis (AG/RS pair, allreduce, broadcasts) is
+        delta-recompiled through `Collectives.repair` — byte-identical to a
+        cold compile of the degraded topology and re-verified on it — and
+        the axis topology is updated so later compiles see the degraded
+        fabric.  All repairs are staged off to the side first and committed
+        in one pass at the end, so a failing repair (e.g. a fault that
+        disconnects an axis) raises without leaving the context half-
+        swapped.  Returns ``{axis: [RepairReport, ...]}``.
+        """
+        from repro.topo.spec import TransformSpec
+        spec = (transform if isinstance(transform, TransformSpec)
+                else TransformSpec.parse_text(transform))
+        if len(spec.args) < 2:
+            raise ValueError(f"{spec} names no link; hot_swap repairs "
+                             f"link-level faults")
+        u, v = spec.args[0], spec.args[1]
+        scope = (list(axes) if axes is not None
+                 else [a for a, s in self.mesh_axes.items() if s > 1])
+        reports: Dict[str, list] = {}
+        staged_topo: Dict[str, DiGraph] = {}
+        staged_axis: Dict[str, AxisSchedules] = {}
+        staged_ar: Dict[str, object] = {}
+        staged_bc: Dict[Tuple[str, int], tuple] = {}
+        for a in scope:
+            topo = self.topology(a)
+            if (u, v) not in topo.cap and (v, u) not in topo.cap:
+                continue        # the fault is not on this axis's fabric
+            axis_reports = []
+            degraded: Optional[DiGraph] = None
+            if a in self._cache:
+                ax = self._cache[a]
+                ag2, rep_ag = self.collectives.repair(ax.ag_sched, spec)
+                rs2, rep_rs = self.collectives.repair(ax.rs_sched, spec)
+                axis_reports += [rep_ag, rep_rs]
+                degraded = ag2.topo
+                staged_axis[a] = AxisSchedules(
+                    axis_name=a, topology=ag2.topo,
+                    ag_sched=ag2, rs_sched=rs2,
+                    ag_prog=self.collectives.lower(ag2),
+                    rs_prog=self.collectives.lower(rs2))
+            if a in self._allreduce:
+                ar2, rep = self.collectives.repair(self._allreduce[a], spec)
+                axis_reports.append(rep)
+                degraded = ar2.topo
+                staged_ar[a] = ar2
+            for (ax_name, root), sched in self._broadcast_scheds.items():
+                if ax_name != a:
+                    continue
+                b2, rep = self.collectives.repair(sched, spec)
+                axis_reports.append(rep)
+                degraded = b2.topo
+                staged_bc[(ax_name, root)] = (b2, self.collectives.lower(b2))
+            if degraded is None:        # nothing compiled yet on this axis
+                degraded = spec.apply(topo)
+            staged_topo[a] = degraded
+            reports[a] = axis_reports
+        if not reports:
+            raise ValueError(f"{spec} applies to no axis of this mesh "
+                             f"(axes {scope})")
+        # commit — nothing above mutated live state, so a failed repair
+        # leaves every program exactly as it was
+        self._topologies.update(staged_topo)
+        self._cache.update(staged_axis)
+        self._allreduce.update(staged_ar)
+        for key, (sched, prog) in staged_bc.items():
+            self._broadcast_scheds[key] = sched
+            self._broadcast[key] = prog
+        return reports
+
     def compile_stats_report(self) -> str:
         """Per-stage schedule-compiler wall times for every artifact this
         context has acquired so far (cache hits report the stage times of

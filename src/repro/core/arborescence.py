@@ -26,7 +26,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .graph import DiGraph, Edge
-from .maxflow import FlowNetwork
+from .maxflow import FlowNetwork, warm_restore
 
 
 class PackingError(RuntimeError):
@@ -174,9 +174,18 @@ class _MuGadget:
     The ∞ stand-in only needs to exceed the flow limit Σm + m(R1), and
     Σm + m(R1) is conserved by splits while g only shrinks, so the value
     sized at build time stays sufficient — the computed µ is identical for
-    any sufficiently large value."""
+    any sufficiently large value.
 
-    __slots__ = ("net", "g", "cur", "x", "sum_m", "inf", "eid", "_dirty")
+    Warm probes: the gadget tracks a target capacity per edge and keeps a
+    per-head flow snapshot, so re-probing a head y after picks restores y's
+    last x->y flow and applies only the pick deltas (one residual-capacity
+    decrease and a grafted class per pick) instead of recomputing the
+    Σm-unit base flow from zero.  µ is unchanged: a restored flow at or
+    above the limit clamps to `want` exactly as a limit-hit cold maxflow
+    does, and below the limit the re-augmented value is the exact F."""
+
+    __slots__ = ("net", "g", "cur", "x", "sum_m", "inf", "eid", "_tgt",
+                 "_warm")
 
     def __init__(self, dstar: DiGraph, g: Dict[Edge, int],
                  classes: Sequence[TreeClass], ci: int, x: int):
@@ -198,7 +207,9 @@ class _MuGadget:
         self.net.add_edges(edges)
         self.g, self.cur, self.x = g, cur, x
         self.sum_m, self.inf = sum_m, inf
-        self._dirty = False
+        self._tgt: List[int] = [c for (_, _, c) in edges]
+        # head y -> (cap snapshot, flow value, target snapshot)
+        self._warm: Dict[int, Tuple[List[int], int, List[int]]] = {}
 
     def note_pick(self, e: Edge, new_cap: int,
                   rest: Optional[TreeClass]) -> None:
@@ -209,20 +220,27 @@ class _MuGadget:
         if eid is None:      # e had capacity 0 at build time (cannot
             eid = self.net.add_edge(*e, 0)    # happen: g never grows), but
             self.eid[e] = eid                 # stay safe
+            self._tgt.append(0)
         self.net.set_edge_cap(eid, new_cap)
+        self._tgt[eid >> 1] = new_cap
         if rest is not None:
             sid = self.net.add_node()
             self.net.add_edge(self.x, sid, rest.mult)
+            self._tgt.append(rest.mult)
             self.net.add_edges((sid, v, self.inf) for v in rest.verts)
+            self._tgt.extend(self.inf for _ in rest.verts)
             self.sum_m += rest.mult
-        self._dirty = True
 
     def mu(self, y: int) -> int:
         want = min(self.g[(self.x, y)], self.cur.mult)
-        if self._dirty:
+        limit = self.sum_m + want
+        state = self._warm.get(y)
+        if state is None:
             self.net.reset_flow()
-        self._dirty = True
-        f = self.net.maxflow(self.x, y, limit=self.sum_m + want)
+            f = self.net.maxflow(self.x, y, limit=limit)
+        else:
+            f = warm_restore(self.net, self._tgt, state, self.x, y, limit)
+        self._warm[y] = (list(self.net.cap), f, list(self._tgt))
         return min(want, f - self.sum_m)
 
 

@@ -89,6 +89,44 @@ class _TheoremEightProber:
         self._armed: List[int] = []
         self._hot3: Dict[int, int] = {}   # switch w -> last binding sink
         self._hot4: Dict[int, int] = {}
+        # (src, snk, probe_head) -> flow snapshot: each eq.-(2) term's base
+        # flow is warm-restarted when the term is revisited (later rounds of
+        # the saturation loop, or a transplanted repair run)
+        self._twarm: Dict[Tuple[int, int, int],
+                          Tuple[List[int], int, List[int]]] = {}
+
+    @classmethod
+    def transplant(cls, base: "_TheoremEightProber", d: DiGraph,
+                   k: int) -> "_TheoremEightProber":
+        """A prober for graph `d` (typically a degraded rescale of the base
+        run's input) that inherits the base run's oracle network, warm flow
+        snapshots, and binding-sink history instead of starting cold.  Every
+        capacity is rewritten to `d`'s value through the target-tracking
+        setters, so the first warm probe of each flow drains/augments
+        exactly the capacity delta between the runs — verdicts are
+        unchanged (the warm engine is exact), only the work shrinks."""
+        self = cls.__new__(cls)
+        self.d = d
+        self.k = k
+        self.nk = d.num_compute * k
+        self.net = base.net.clone(g=d)
+        self.inf = max(base.inf, 2 * sum(d.cap.values()) + self.nk + 1)
+        self.sinks = sorted(d.compute)
+        self._gadget = dict(base._gadget)
+        self._armed = []
+        self._hot3 = dict(base._hot3)
+        self._hot4 = dict(base._hot4)
+        # snapshot tuples are never mutated (warm_flow replaces entries
+        # wholesale), so sharing them with the base prober is safe
+        self._twarm = dict(base._twarm)
+        net = self.net
+        for e, eid in net.eid.items():
+            net.set_cap_id(eid, d.cap.get(e, 0))
+        for eid in self._gadget.values():
+            net.set_cap_id(eid, 0)
+        for u, eid in net.src_eid.items():
+            net.set_cap_id(eid, k)
+        return self
 
     # -- gadget plumbing ------------------------------------------------ #
 
@@ -122,20 +160,29 @@ class _TheoremEightProber:
 
     # -- Theorem 8 / eq. (2) -------------------------------------------- #
 
-    def split_cap(self, u: int, w: int, t: int) -> int:
+    def split_cap(self, u: int, w: int, t: int,
+                  expect: Optional[int] = None) -> int:
         """Theorem 8 / eq. (2): max M such that splitting (u,w),(w,t) by M
         keeps min_v F(s, v; D^ef_k) >= |Vc| k.  Requires u != t.
 
         Each term's minimum is taken sink-adaptively: the last binding sink
         of this switch is probed first, so `limit` collapses to the final
         minimum immediately and later probes early-exit (the minimum itself
-        is order-independent)."""
+        is order-independent).
+
+        `expect` is a caller-guaranteed upper bound on the answer (replay
+        under capacity domination passes the base run's value): the running
+        minimum starts there, so every probe runs against the tightest
+        possible flow limit.  Results at the clamp are exact because the
+        true value cannot exceed it."""
         assert u != t, "degenerate pair handled by discard_cap"
         d = self.d
         c_uw = d.cap.get((u, w), 0)
         c_wt = d.cap.get((w, t), 0)
         bound = min(c_uw, c_wt)
-        if bound == 0:
+        if expect is not None:
+            bound = min(bound, expect)
+        if bound <= 0:
             return 0
         nk = self.nk
         limit = nk + bound  # flows above this are non-binding
@@ -195,7 +242,8 @@ class _TheoremEightProber:
             if value is None:
                 if probe is not None:
                     net.set_cap_id(probe, inf)
-                value = net.flow(src, snk, limit=limit)
+                value = net.warm_flow(self._twarm, (src, snk, probe_head),
+                                      src, snk, limit)
             else:
                 if probe is not None:
                     net.increase_cap_id(probe, inf)
@@ -213,16 +261,23 @@ class _TheoremEightProber:
 
     # -- degenerate discard --------------------------------------------- #
 
-    def discard_cap(self, u: int, w: int) -> int:
+    def discard_cap(self, u: int, w: int,
+                    expect: Optional[int] = None) -> int:
         """Degenerate split (u,w),(w,u): capacity is simply discarded.  Max
         M keeping the Theorem-5 oracle true, by monotone binary search over
         the shared network with warm-started per-sink flows (each probe
-        only moves the two rewritten capacities and re-augments)."""
+        only moves the two rewritten capacities and re-augments).
+
+        `expect` is a caller-guaranteed upper bound on the answer (replay
+        under capacity domination): one feasibility check at it decides the
+        whole search, and on failure the search resumes below it."""
         d = self.d
         c_uw = d.cap.get((u, w), 0)
         c_wu = d.cap.get((w, u), 0)
         bound = min(c_uw, c_wu)
-        if bound == 0:
+        if expect is not None:
+            bound = min(bound, expect)
+        if bound <= 0:
             return 0
         self._disarm()
         net, nk, sinks = self.net, self.nk, self.sinks
@@ -289,23 +344,51 @@ class _RootedProber:
         self.net = SourcedNetwork(d, dict(sorted(demands.items())))
         self.sinks = sorted(d.compute)
 
+    @classmethod
+    def transplant(cls, base: "_RootedProber", d: DiGraph,
+                   demands: Dict[int, int]) -> "_RootedProber":
+        """Rooted analogue of `_TheoremEightProber.transplant`: inherit the
+        base run's network and per-sink warm flows, rewrite every capacity
+        to `d`'s (and the source edges to the new demands).  Requires the
+        same demand keys (same root set) as the base run."""
+        if set(demands) != set(base.net.src_eid):
+            raise ValueError("transplant requires identical demand roots")
+        self = cls.__new__(cls)
+        self.d = d
+        self.total = sum(demands.values())
+        self.net = base.net.clone(g=d)
+        self.sinks = sorted(d.compute)
+        net = self.net
+        for e, eid in net.eid.items():
+            net.set_cap_id(eid, d.cap.get(e, 0))
+        for u, eid in net.src_eid.items():
+            net.set_cap_id(eid, demands[u])
+        return self
+
     def sync(self, edges: Sequence[Edge]) -> None:
         for e in edges:
             if e[0] != e[1]:
                 self.net.set_cap(*e, self.d.cap.get(e, 0))
 
-    def split_cap(self, u: int, w: int, t: int) -> int:
+    def split_cap(self, u: int, w: int, t: int,
+                  expect: Optional[int] = None) -> int:
         """Max M such that splitting (u,w),(w,t) by M keeps the rooted
         oracle.  Every cut's egress capacity is non-increasing in M under
         the split, so feasibility is monotone and a binary search on the
         oracle is exact (the closed form of Theorem 8 only covers the
         uniform all-roots case).  Each probe rewrites the three affected
-        capacities and re-augments the warm per-sink flows."""
+        capacities and re-augments the warm per-sink flows.
+
+        `expect` is a caller-guaranteed upper bound on the answer (replay
+        under capacity domination): one feasibility check at it usually
+        decides the whole search."""
         d, net = self.d, self.net
         c_uw = d.cap.get((u, w), 0)
         c_wt = d.cap.get((w, t), 0)
         bound = min(c_uw, c_wt)
-        if bound == 0:
+        if expect is not None:
+            bound = min(bound, expect)
+        if bound <= 0:
             return 0
         c_ut = d.cap.get((u, t), 0)
         total, sinks = self.total, self.sinks
@@ -334,8 +417,9 @@ class _RootedProber:
             if u != t:
                 net.set_cap(u, t, c_ut)
 
-    def discard_cap(self, t: int, w: int) -> int:
-        return self.split_cap(t, w, t)
+    def discard_cap(self, t: int, w: int,
+                    expect: Optional[int] = None) -> int:
+        return self.split_cap(t, w, t, expect=expect)
 
 
 def max_split_capacity_rooted(d: DiGraph, demands: Dict[int, int],
@@ -347,19 +431,197 @@ def max_split_capacity_rooted(d: DiGraph, demands: Dict[int, int],
 
 def remove_switches_rooted(d: DiGraph, demands: Dict[int, int],
                            pair_priority: Optional[PairPriority] = None,
-                           verify: bool = False) -> SplitResult:
+                           verify: bool = False,
+                           prober_factory=None,
+                           prober_sink=None,
+                           trace: bool = False) -> SplitResult:
     """Algorithm-1 loop with the rooted (broadcast/reduce) oracle: split off
     all switches while preserving min_v F(s, v) >= Σ demands for the
     demand-weighted super-source — enough to pack `demands[u]` spanning
     out-trees at each root u afterwards (Frank).  Eulerian graphs always
-    admit a complete splitting-off, so the greedy loop terminates."""
+    admit a complete splitting-off, so the greedy loop terminates.
+
+    `prober_factory` overrides the prober construction (repair passes a
+    `_ReplayProber` over a transplant of a retained base-run prober);
+    `prober_sink` receives the live prober after the run, for retention by
+    a warm store; `trace=True` wraps the default prober in a
+    `_TracingProber` so the sunk prober carries its decision log."""
     validate_eulerian(d)
     k = sum(demands.values())
+    factory = prober_factory or (lambda dd: _RootedProber(dd, demands))
+    if trace and prober_factory is None:
+        factory = (lambda dd: _TracingProber(_RootedProber(dd, demands), dd))
     return _isolate_switches(
         d, k,
-        prober_factory=lambda dd: _RootedProber(dd, demands),
+        prober_factory=factory,
         pair_priority=pair_priority, verify=verify,
-        oracle=lambda dd: _oracle_holds_demands(dd, demands))
+        oracle=lambda dd: _oracle_holds_demands(dd, demands),
+        prober_sink=prober_sink)
+
+
+# ---------------------------------------------------------------------- #
+# Decision traces: record one Algorithm-1 run, replay it against a delta
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class SplitTrace:
+    """The decision log of one Algorithm-1 run: every prober call with its
+    result, plus the residual capacities at each switch boundary.
+
+    `events` holds ``(tag, u, w, t, m)`` rows — tag ``"s"`` for
+    `split_cap(u, w, t)`, ``"d"`` for `discard_cap(u, w)` (recorded with
+    ``t == u``; the loop never passes ``u == t`` to `split_cap`, so the tag
+    disambiguates).  `segments` holds ``(switch, first_event_index,
+    residual_caps)`` per isolated switch, in loop order.
+    """
+    events: List[Tuple[str, int, int, int, int]] = \
+        dataclasses.field(default_factory=list)
+    segments: List[Tuple[int, int, Dict[Edge, int]]] = \
+        dataclasses.field(default_factory=list)
+
+
+class _TracingProber:
+    """Transparent prober wrapper that logs the run into a `SplitTrace`.
+
+    `repro.core.plan.split` wraps every cold prober with this so the warm
+    store retains, next to the prober itself, the exact decision sequence —
+    the raw material `_ReplayProber` needs to skip work during a repair.
+    The overhead is one tuple append per probe and one dict copy per
+    switch, invisible next to the maxflows being logged.
+    """
+
+    def __init__(self, inner, d: DiGraph):
+        self.inner = inner
+        self.d = d
+        self.trace = SplitTrace()
+
+    def note_switch(self, w: int) -> None:
+        self.trace.segments.append(
+            (w, len(self.trace.events), dict(self.d.cap)))
+
+    def sync(self, edges: Sequence[Edge]) -> None:
+        self.inner.sync(edges)
+
+    def split_cap(self, u: int, w: int, t: int) -> int:
+        m = self.inner.split_cap(u, w, t)
+        self.trace.events.append(("s", u, w, t, m))
+        return m
+
+    def discard_cap(self, u: int, w: int) -> int:
+        m = self.inner.discard_cap(u, w)
+        self.trace.events.append(("d", u, w, u, m))
+        return m
+
+
+class _ReplayProber:
+    """Replay a base run's `SplitTrace` against a degraded residual,
+    skipping every probe the trace proves is zero.
+
+    Soundness rests on capacity monotonicity of the oracles: each
+    Theorem-8 term is ``min_v F(src, snk; D̂) − |Vc|k`` with F a maxflow of
+    the residual capacities, and the rooted oracle is a feasibility
+    threshold on the same flows — both non-decreasing when capacities
+    grow.  So while the degraded residual is pointwise *dominated* by the
+    base residual at the aligned trace position (``cap'(e) <= cap(e)``
+    everywhere), any candidate the base run probed to zero is a proven
+    zero for the degraded run too and is answered without touching the
+    oracle.  Positive base results only bound the degraded value from
+    above, so picks are always probed for real (on the transplanted warm
+    network, where they re-augment little).
+
+    Alignment: at each switch boundary the wrapper checks domination
+    against the recorded residual snapshot and enters sync; within a
+    segment it advances the cursor past base zero-probes (they left the
+    base residual untouched) until the current candidate matches.  A pick
+    whose probed value differs from the recorded one, a base *pick* the
+    degraded enumeration skipped, or cursor exhaustion all break the
+    segment out of sync — every later candidate of that switch is probed
+    for real, which is plain cold semantics and always correct.  The next
+    boundary re-checks domination and may re-enter sync.
+
+    The wrapper records its own `SplitTrace` while replaying, so a
+    repaired artifact's retained prober can seed yet another repair.
+    """
+
+    def __init__(self, inner, d: DiGraph, base_trace: SplitTrace):
+        self.inner = inner
+        self.d = d
+        self.base = base_trace
+        self.trace = SplitTrace()
+        self.skipped = 0            # probes answered from the trace
+        self.probed = 0             # probes that hit the oracle
+        self._seg = -1
+        self._cur = 0               # cursor into base.events
+        self._end = 0
+        self._sync = False
+
+    def note_switch(self, w: int) -> None:
+        self.trace.segments.append(
+            (w, len(self.trace.events), dict(self.d.cap)))
+        segs = self.base.segments
+        j = self._seg + 1
+        if j < len(segs) and segs[j][0] == w:
+            self._seg = j
+            self._cur = segs[j][1]
+            self._end = (segs[j + 1][1] if j + 1 < len(segs)
+                         else len(self.base.events))
+            snap = segs[j][2]
+            self._sync = all(c <= snap.get(e, 0)
+                             for e, c in self.d.cap.items())
+        else:                       # structural mismatch: never sync again
+            self._seg = len(segs)
+            self._sync = False
+
+    def sync(self, edges: Sequence[Edge]) -> None:
+        self.inner.sync(edges)
+
+    def _consume(self, tag: str, u: int, w: int, t: int) -> Optional[int]:
+        """Advance the cursor to this candidate's base event and return its
+        recorded value, or None (desynchronised)."""
+        ev = self.base.events
+        while self._cur < self._end:
+            btag, bu, bw, bt, bm = ev[self._cur]
+            if (btag, bu, bw, bt) == (tag, u, w, t):
+                self._cur += 1
+                return bm
+            if bm != 0:
+                # a base pick our enumeration skipped: residuals diverge
+                return None
+            self._cur += 1          # foreign zero-probe: base residual
+        return None                 # unchanged, safe to pass over
+
+    def _answer(self, tag: str, u: int, w: int, t: int,
+                probe: Callable[[Optional[int]], int]) -> int:
+        if self._sync:
+            bm = self._consume(tag, u, w, t)
+            if bm == 0:
+                self.skipped += 1
+                self.trace.events.append((tag, u, w, t, 0))
+                return 0
+            if bm is not None:
+                # domination bounds the degraded answer by the base one, so
+                # the prober may clamp its search at `expect` and stay exact
+                m = probe(bm)
+                self.probed += 1
+                self.trace.events.append((tag, u, w, t, m))
+                if m != bm:
+                    self._sync = False
+                return m
+            self._sync = False
+        m = probe(None)
+        self.probed += 1
+        self.trace.events.append((tag, u, w, t, m))
+        return m
+
+    def split_cap(self, u: int, w: int, t: int) -> int:
+        return self._answer(
+            "s", u, w, t,
+            lambda e: self.inner.split_cap(u, w, t, expect=e))
+
+    def discard_cap(self, u: int, w: int) -> int:
+        return self._answer(
+            "d", u, w, u,
+            lambda e: self.inner.discard_cap(u, w, expect=e))
 
 
 # ---------------------------------------------------------------------- #
@@ -368,25 +630,37 @@ def remove_switches_rooted(d: DiGraph, demands: Dict[int, int],
 
 def remove_switches(d: DiGraph, k: int,
                     pair_priority: Optional[PairPriority] = None,
-                    verify: bool = False) -> SplitResult:
+                    verify: bool = False,
+                    prober_factory=None,
+                    prober_sink=None,
+                    trace: bool = False) -> SplitResult:
     """Algorithm 1: split off all switch nodes of `d` (capacities already
     scaled to G({U b_e})), preserving the Theorem-5 tree-packing condition.
 
     pair_priority(u, w, t) orders ingress candidates per egress edge — the
     paper uses this hook (§2.2 example) to e.g. prefer cross-cluster pairs.
+    `prober_factory` overrides the prober construction (repair passes a
+    `_ReplayProber` over a transplant of a retained base-run prober);
+    `prober_sink` receives the live prober after the run, for retention by
+    a warm store; `trace=True` wraps the default prober in a
+    `_TracingProber` so the sunk prober carries its decision log.
     """
     validate_eulerian(d)
+    factory = prober_factory or (lambda dd: _TheoremEightProber(dd, k))
+    if trace and prober_factory is None:
+        factory = (lambda dd: _TracingProber(_TheoremEightProber(dd, k), dd))
     return _isolate_switches(
         d, k,
-        prober_factory=lambda dd: _TheoremEightProber(dd, k),
+        prober_factory=factory,
         pair_priority=pair_priority, verify=verify,
-        oracle=lambda dd: _oracle_holds(dd, k))
+        oracle=lambda dd: _oracle_holds(dd, k),
+        prober_sink=prober_sink)
 
 
 def _isolate_switches(d: DiGraph, k: int,
                       prober_factory,
                       pair_priority: Optional[PairPriority],
-                      verify: bool, oracle) -> SplitResult:
+                      verify: bool, oracle, prober_sink=None) -> SplitResult:
     """Shared Algorithm-1 saturation loop, parameterised by the maximum-
     splittable-capacity prober (Theorem-8 closed form for allgather,
     warm binary search for the rooted variants).  One prober — and its
@@ -408,7 +682,10 @@ def _isolate_switches(d: DiGraph, k: int,
             routing[(u, t)][w] = routing[(u, t)].get(w, 0) + m
         prober.sync(((u, w), (w, t), (u, t)))
 
+    boundary = getattr(prober, "note_switch", None)
     for w in sorted(d.switches):
+        if boundary is not None:
+            boundary(w)             # trace/replay probers log the residual
         # saturate every egress edge of w in turn
         guard = 0
         while True:
@@ -454,6 +731,8 @@ def _isolate_switches(d: DiGraph, k: int,
         validate_eulerian(star)
         if not oracle(star):
             raise EdgeSplitError("edge splitting broke the packing oracle")
+    if prober_sink is not None:
+        prober_sink(prober)
     return SplitResult(graph=star, routing=routing, original=original, k=k)
 
 

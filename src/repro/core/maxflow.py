@@ -107,6 +107,18 @@ class FlowNetwork:
         """Flow currently pushed through edge `edge_id` (reverse residual)."""
         return self.cap[edge_id ^ 1]
 
+    def clone(self) -> "FlowNetwork":
+        """Independent copy (arrays duplicated) — the transplant primitive:
+        a repair run copies a retained oracle network and rewrites its
+        capacities instead of rebuilding the layout."""
+        dup = FlowNetwork(0)
+        dup.n = self.n
+        dup.to = list(self.to)
+        dup.cap = list(self.cap)
+        dup.head = list(self.head)
+        dup.nxt = list(self.nxt)
+        return dup
+
     def set_edge_cap(self, edge_id: int, cap: int) -> None:
         """Rewrite edge `edge_id`'s capacity in place (clearing any flow on
         it) — the probe primitive that lets one network serve a whole
@@ -259,6 +271,42 @@ class FlowNetwork:
         return [u for u in range(self.n) if seen[u]]
 
 
+def warm_restore(net: FlowNetwork, cur_tgt: List[int],
+                 state: Tuple[List[int], int, List[int]],
+                 src: int, snk: int, limit: int) -> int:
+    """Restore a flow snapshot taken for (src, snk), apply the capacity
+    deltas accumulated since (flow-preserving increase/decrease against the
+    target-capacity records), and re-augment up to `limit`.
+
+    `state` is `(cap snapshot, flow value, target snapshot)`; `cur_tgt` is
+    the *current* per-edge target capacities (index = edge id >> 1).  The
+    snapshot must be a valid conserving src->snk flow; the result is an
+    exact maxflow value capped at `limit` — it may exceed `limit` when the
+    restored flow already did, which callers treat identically (every user
+    only compares against, or clamps at, the limit).  This is the delta
+    engine behind the per-sink `warm=True` sweeps, the keyed `warm_flow`
+    store, and the §2.3 gadget warm probes."""
+    caps, value, tgt = state
+    cap = net.cap
+    cap[:len(caps)] = caps
+    # edges added since the snapshot carried no flow: install fresh
+    for j in range(len(tgt), len(cur_tgt)):
+        cap[2 * j] = cur_tgt[j]
+        cap[2 * j + 1] = 0
+    decreases: List[Tuple[int, int]] = []
+    for j, old in enumerate(tgt):
+        new = cur_tgt[j]
+        if new > old:        # increases first: more reroute room
+            net.increase_edge_cap(2 * j, new)
+        elif new < old:
+            decreases.append((2 * j, new))
+    for eid, new in decreases:
+        value -= net.decrease_edge_cap(eid, new, src, snk)
+    if value < limit:
+        value += net.maxflow(src, snk, limit=limit - value)
+    return value
+
+
 # ---------------------------------------------------------------------- #
 # Reusable oracle network
 # ---------------------------------------------------------------------- #
@@ -289,7 +337,7 @@ class SourcedNetwork:
     """
 
     __slots__ = ("g", "net", "s", "eid", "src_eid", "_tgt", "_order",
-                 "_warm")
+                 "_warm", "last_failing")
 
     def __init__(self, g: DiGraph,
                  source_caps: Optional[Mapping[int, int]] = None,
@@ -309,6 +357,28 @@ class SourcedNetwork:
         self._order: Optional[List[int]] = None    # adaptive sink order
         # sink -> (cap snapshot, flow value, target snapshot)
         self._warm: Dict[int, Tuple[List[int], int, List[int]]] = {}
+        self.last_failing: Optional[int] = None    # sink of last failed sweep
+
+    def clone(self, g: Optional[DiGraph] = None) -> "SourcedNetwork":
+        """Independent copy for transplanting a retained oracle onto a
+        repaired compile.  Passing `g` rebinds the graph the capacity
+        rewrites read from (`rescale_graph_caps` / `floor_graph_caps` use
+        `self.g.cap.get(e, 0)` over the recorded edge ids, so a clone bound
+        to a degraded graph probes the degraded capacities — edges the new
+        graph lacks become capacity 0, which is invisible to the oracle)."""
+        dup = object.__new__(SourcedNetwork)
+        dup.g = self.g if g is None else g
+        dup.net = self.net.clone()
+        dup.s = self.s
+        dup.eid = dict(self.eid)
+        dup.src_eid = dict(self.src_eid)
+        dup._tgt = list(self._tgt)
+        dup._order = None if self._order is None else list(self._order)
+        # snapshot tuples are never mutated in place (warm probes replace
+        # entries wholesale), so sharing them with the source is safe
+        dup._warm = dict(self._warm)
+        dup.last_failing = self.last_failing
+        return dup
 
     def ensure_edge(self, u: int, v: int) -> int:
         """Edge id of (u, v), adding a capacity-0 edge if absent (probes of
@@ -406,8 +476,14 @@ class SourcedNetwork:
                 if idx:      # move the failing sink to the front
                     order.remove(v)
                     order.insert(0, v)
+                self.last_failing = v
                 return False
+        self.last_failing = None
         return True
+
+    def _warm_value(self, state: Tuple[List[int], int, List[int]],
+                    src: int, snk: int, limit: int) -> int:
+        return warm_restore(self.net, self._tgt, state, src, snk, limit)
 
     def _warm_probe(self, v: int, threshold: int) -> int:
         """F(s, v) >= threshold probe warm-started from v's last flow."""
@@ -417,26 +493,27 @@ class SourcedNetwork:
             net.reset_flow()
             value = net.maxflow(s, v, limit=threshold)
         else:
-            caps, value, tgt = state
-            cap = net.cap
-            cap[:len(caps)] = caps
-            cur = self._tgt
-            # edges added since the snapshot carried no flow: install fresh
-            for j in range(len(tgt), len(cur)):
-                cap[2 * j] = cur[j]
-                cap[2 * j + 1] = 0
-            decreases: List[Tuple[int, int]] = []
-            for j, old in enumerate(tgt):
-                new = cur[j]
-                if new > old:        # increases first: more reroute room
-                    net.increase_edge_cap(2 * j, new)
-                elif new < old:
-                    decreases.append((2 * j, new))
-            for eid, new in decreases:
-                value -= net.decrease_edge_cap(eid, new, s, v)
-            if value < threshold:
-                value += net.maxflow(s, v, limit=threshold - value)
+            value = self._warm_value(state, s, v, threshold)
         self._warm[v] = (list(net.cap), value, list(self._tgt))
+        return value
+
+    def warm_flow(self, store: Dict, key, src: int, snk: int, limit: int,
+                  maxsize: int = 512) -> int:
+        """Maxflow src->snk warm-started from `store[key]` (a snapshot a
+        previous call with the same key left behind); falls back to a cold
+        reset+maxflow when the key is unseen.  The resulting state is
+        snapshotted back under `key` (LRU-capped at `maxsize` entries).
+        Verdict-exact: the value equals `flow(src, snk, limit)` whenever
+        both are < limit, and both are >= limit otherwise."""
+        state = store.pop(key, None)
+        if state is None:
+            self.net.reset_flow()
+            value = self.net.maxflow(src, snk, limit=limit)
+        else:
+            value = self._warm_value(state, src, snk, limit)
+        store[key] = (list(self.net.cap), value, list(self._tgt))
+        while len(store) > maxsize:
+            store.pop(next(iter(store)))
         return value
 
     def flow(self, a: int, b: int, limit: Optional[int] = None) -> int:

@@ -122,8 +122,13 @@ class Optimality:
         return self.inv_x_star
 
 
-def allgather_inv_xstar(g: DiGraph) -> Fraction:
-    """Binary search of §2.1; returns exact rational 1/x*."""
+def allgather_inv_xstar(g: DiGraph,
+                        net: Optional[SourcedNetwork] = None) -> Fraction:
+    """Binary search of §2.1; returns exact rational 1/x*.
+
+    `net` lets callers pass in (and afterwards retain) the Theorem-1
+    oracle network — `repro.core.repair` keeps it warm for later
+    delta-recompiles of the same topology.  It must be bound to `g`."""
     check_reachable(g)
     n = g.num_compute
     if n == 1:
@@ -133,7 +138,9 @@ def allgather_inv_xstar(g: DiGraph) -> Fraction:
         raise ValueError(f"{g.name}: a compute node has zero ingress")
     lo = Fraction(n - 1, dmin)
     hi = Fraction(n - 1)
-    net = _oracle_net(g)          # one network serves every probe below
+    if net is None:
+        net = _oracle_net(g)      # one network serves every probe below
+    assert net.g is g, "oracle network bound to a different graph"
     if _feasible_on(net, lo):
         return lo
     # invariant: lo infeasible (< 1/x*), hi feasible (>= 1/x*)
@@ -165,10 +172,11 @@ def choose_U_k(g: DiGraph, inv_x_star: Fraction) -> Tuple[Fraction, int]:
     return U, k
 
 
-def solve_optimality(g: DiGraph) -> Optimality:
+def solve_optimality(g: DiGraph,
+                     net: Optional[SourcedNetwork] = None) -> Optimality:
     """Full §2.1: exact 1/x*, then minimal (U, k)."""
     validate_eulerian(g)
-    inv = allgather_inv_xstar(g)
+    inv = allgather_inv_xstar(g, net=net)
     U, k = choose_U_k(g, inv)
     return Optimality(inv_x_star=inv, U=U, k=k)
 

@@ -228,7 +228,11 @@ def solve(plan: CollectivePlan) -> CollectivePlan:
                          U=Fraction(1), k=lam)
         scaled = w
     elif plan.fixed_k is None:
-        opt = solve_optimality(w)
+        from .optimality import _oracle_net
+        from .repair import WARM
+        net = _oracle_net(w)
+        opt = solve_optimality(w, net=net)
+        WARM.offer_solve(w, net)    # retained for later delta-recompiles
         scaled = w.scaled(opt.U)
     else:
         res = solve_fixed_k(w, plan.fixed_k)
@@ -267,26 +271,41 @@ def adopt_solution(plan: CollectivePlan, opt: Optimality) -> CollectivePlan:
                                     shared="transpose"))
 
 
-def split(plan: CollectivePlan) -> CollectivePlan:
+def split(plan: CollectivePlan, prober_factory=None) -> CollectivePlan:
     """Stage 2: §2.2 switch removal on the solved, scaled graph — the
     rooted oracle for broadcast/reduce, Theorem 8 for the rest; a trivial
-    split when the topology is already direct-connect."""
+    split when the topology is already direct-connect.
+
+    `prober_factory` (graph -> prober) substitutes the Theorem-8 / rooted
+    oracle — `repro.core.repair` passes transplanted warm probers through
+    it.  Either way the finished prober is retained in the warm store for
+    later delta-recompiles of the same scaled graph."""
     _require(plan, "split", "opt", "split")
+    from .repair import WARM
     t0 = time.perf_counter()
     c0 = COUNTERS.snapshot()
     g = plan.scaled
     switched = g.switches and any(w in e for e in g.cap for w in g.switches)
     if plan.is_rooted:
         if switched:
+            sink = (lambda p: WARM.offer_split(
+                g, "rooted", (plan.root, plan.opt.k), p))
             res = remove_switches_rooted(g, {plan.root: plan.opt.k},
                                          pair_priority=plan.pair_priority,
-                                         verify=plan.verify)
+                                         verify=plan.verify,
+                                         prober_factory=prober_factory,
+                                         prober_sink=sink,
+                                         trace=prober_factory is None)
         else:
             res = trivial_split(g, plan.opt.k)
     elif switched:
+        sink = lambda p: WARM.offer_split(g, "tree", plan.opt.k, p)
         res = remove_switches(g, plan.opt.k,
                               pair_priority=plan.pair_priority,
-                              verify=plan.verify)
+                              verify=plan.verify,
+                              prober_factory=prober_factory,
+                              prober_sink=sink,
+                              trace=prober_factory is None)
     else:
         res = trivial_split(g, plan.opt.k)
     wall = time.perf_counter() - t0

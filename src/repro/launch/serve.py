@@ -35,6 +35,12 @@ def main() -> int:
                     help="skip the tree-broadcast parameter distribution "
                          "(saves the broadcast schedule compile on boot "
                          "when no cache is warmed)")
+    ap.add_argument("--inject-fault", default="",
+                    help="'u-v' — fail link u-v on the model axis after the "
+                         "broadcast schedule is compiled: the driver repairs "
+                         "the program in place (CollectiveContext.hot_swap) "
+                         "and distributes parameters over the degraded "
+                         "fabric")
     args = ap.parse_args()
 
     if args.host_devices and "XLA_FLAGS" not in os.environ:
@@ -90,6 +96,22 @@ def main() -> int:
         from jax.sharding import PartitionSpec as P
 
         prog = ctx.broadcast_program("model", root=0)
+        if args.inject_fault:
+            # a link died between boot and parameter distribution: repair
+            # the compiled broadcast (and any other model-axis programs)
+            # and carry on over the degraded fabric — no recompile from
+            # scratch, no engine restart
+            from repro.train import LinkFault
+            u_s, v_s = args.inject_fault.split("-", 1)
+            fault = LinkFault(int(u_s), int(v_s))
+            print(f"[repair] injected {fault}")
+            reports = ctx.hot_swap(fault.transform_text)
+            for axis, reps in reports.items():
+                for r in reps:
+                    print(f"[repair] axis {axis} {r.kind}: "
+                          f"{r.repair_time_s * 1e3:.1f}ms "
+                          f"warm=(solve={r.warm_solve},split={r.warm_split})")
+            prog = ctx.broadcast_program("model", root=0)
 
         def _bcast_tree(tree):
             return jax.tree.map(

@@ -45,6 +45,12 @@ def main() -> int:
                          "programs into this on-disk artifact cache (later "
                          "launches and any pipeline-collectives consumer "
                          "load them instead of compiling)")
+    ap.add_argument("--inject-fault", default="",
+                    help="'step:u-v' — raise a LinkFault for link u-v at "
+                         "that step.  The supervisor's on_link_fault hook "
+                         "repairs the affected per-axis schedules in place "
+                         "(CollectiveContext.hot_swap) and retries the same "
+                         "step without restoring a checkpoint")
     args = ap.parse_args()
 
     if args.host_devices and "XLA_FLAGS" not in os.environ:
@@ -61,8 +67,8 @@ def main() -> int:
     from repro.configs import get_config, reduced_config
     from repro.models import build_model
     from repro.models.common import set_activation_sharding
-    from repro.train import (AdamWConfig, TrainConfig, TrainSupervisor,
-                             init_adamw, make_train_step)
+    from repro.train import (AdamWConfig, FaultInjector, TrainConfig,
+                             TrainSupervisor, init_adamw, make_train_step)
     from repro.train.data import DataConfig, make_global_batch
     from .sharding import batch_specs, opt_specs, param_specs, to_named
 
@@ -120,47 +126,51 @@ def main() -> int:
 
     batch0 = make_global_batch(dc, 0, mesh, ("data",))
     b_spec = batch_specs(jax.eval_shape(lambda: batch0), mesh)
-    if args.collectives == "pipeline":
-        # Gradients cross devices through the paper's tree-pipeline
-        # allreduce: one cached `repro.allreduce` artifact per axis, lowered
-        # to ppermute programs and wrapped as the BucketedAllReduce hook of
-        # make_train_step, executed inside shard_map.
-        if mp != 1:
-            raise SystemExit("--collectives pipeline requires "
-                             "--model-parallel 1")
-        try:
-            from jax import shard_map
-        except ImportError:
-            from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
+    if args.collectives == "pipeline" and mp != 1:
+        raise SystemExit("--collectives pipeline requires "
+                         "--model-parallel 1")
 
-        red = ctx.bucketed_allreduce("data", wire_dtype=None)
-        # the cached allreduce artifact is now acquired (compiled or
-        # replayed) — log which pipeline stage the time went to
-        print(ctx.compile_stats_report())
+    def build_step_jit():
+        """The jitted step — rebuilt after a hot swap so the shard_map
+        closure picks up the repaired ppermute programs."""
+        if args.collectives == "pipeline":
+            # Gradients cross devices through the paper's tree-pipeline
+            # allreduce: one cached `repro.allreduce` artifact per axis,
+            # lowered to ppermute programs and wrapped as the
+            # BucketedAllReduce hook of make_train_step, executed inside
+            # shard_map.
+            try:
+                from jax import shard_map
+            except ImportError:
+                from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
 
-        def grad_reduce(tree):
-            return jax.tree.map(lambda x: x / dp, red(tree))
+            red = ctx.bucketed_allreduce("data", wire_dtype=None)
+            # the cached allreduce artifact is now acquired (compiled or
+            # replayed) — log which pipeline stage the time went to
+            print(ctx.compile_stats_report())
 
-        base_step = make_train_step(model, tc, grad_reduce=grad_reduce)
+            def grad_reduce(tree):
+                return jax.tree.map(lambda x: x / dp, red(tree))
 
-        def spmd_step(params, opt_state, batch):
-            p, o, m = base_step(params, opt_state, batch)
-            # per-device diagnostics must be replicated for out_specs=P()
-            m = {k: jax.lax.pmean(v, "data") for k, v in m.items()}
-            return p, o, m
+            base_step = make_train_step(model, tc, grad_reduce=grad_reduce)
 
-        kwargs = dict(mesh=mesh, in_specs=(P(), P(), P("data")),
-                      out_specs=(P(), P(), P()))
-        try:
-            step_sm = shard_map(spmd_step, check_rep=False, **kwargs)
-        except TypeError:       # newer jax: check_rep retired
-            step_sm = shard_map(spmd_step, **kwargs)
+            def spmd_step(params, opt_state, batch):
+                p, o, m = base_step(params, opt_state, batch)
+                # per-device diagnostics must be replicated for out_specs=P()
+                m = {k: jax.lax.pmean(v, "data") for k, v in m.items()}
+                return p, o, m
+
+            kwargs = dict(mesh=mesh, in_specs=(P(), P(), P("data")),
+                          out_specs=(P(), P(), P()))
+            try:
+                step_sm = shard_map(spmd_step, check_rep=False, **kwargs)
+            except TypeError:       # newer jax: check_rep retired
+                step_sm = shard_map(spmd_step, **kwargs)
+            with mesh:
+                return jax.jit(step_sm, donate_argnums=(0, 1))
         with mesh:
-            step_jit = jax.jit(step_sm, donate_argnums=(0, 1))
-    else:
-        with mesh:
-            step_jit = jax.jit(
+            return jax.jit(
                 make_train_step(model, tc),
                 in_shardings=(to_named(p_spec, mesh), to_named(o_spec, mesh),
                               to_named(b_spec, mesh)),
@@ -168,18 +178,43 @@ def main() -> int:
                                None),
                 donate_argnums=(0, 1))
 
+    live = {"step_jit": build_step_jit()}
+    injector = (FaultInjector.parse(args.inject_fault)
+                if args.inject_fault else None)
+
     def step_fn(step, state):
+        if injector is not None:
+            injector.check(step)
         p, o = state
         batch = make_global_batch(dc, step, mesh, ("data",))
-        p, o, metrics = step_jit(p, o, batch)
+        p, o, metrics = live["step_jit"](p, o, batch)
         return (p, o), metrics
+
+    def on_link_fault(fault):
+        if ctx is None:
+            # no pipeline collective state to repair — XLA collectives
+            # re-route on their own; just retry the step
+            print(f"[repair] {fault}: no collective context attached, "
+                  f"retrying step on XLA collectives")
+            return
+        reports = ctx.hot_swap(fault.transform_text)
+        for axis, reps in reports.items():
+            for r in reps:
+                print(f"[repair] axis {axis} {r.kind}: "
+                      f"{r.repair_time_s * 1000:.1f}ms "
+                      f"warm=(solve={r.warm_solve},split={r.warm_split}) "
+                      f"cached={r.cached}")
+        live["step_jit"] = build_step_jit()
 
     os.makedirs(args.ckpt_dir, exist_ok=True)
     sup = TrainSupervisor(ckpt_dir=args.ckpt_dir,
-                          ckpt_every=args.ckpt_every)
+                          ckpt_every=args.ckpt_every,
+                          on_link_fault=on_link_fault)
     state, final = sup.run(state=(params, opt), num_steps=args.steps,
                            step_fn=step_fn, log_every=10)
-    print(f"done at step {final}; stragglers: {len(sup.monitor.flagged)}")
+    print(f"done at step {final}; stragglers: {len(sup.monitor.flagged)}; "
+          f"link faults repaired: "
+          f"{injector.fired if injector else False}")
     return 0
 
 

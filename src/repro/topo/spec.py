@@ -252,6 +252,17 @@ class TransformSpec:
         return f"@{self.name}({','.join(toks)})"
 
     @classmethod
+    def parse_text(cls, text: str) -> "TransformSpec":
+        """Parse one standalone transform — ``"@fail(0-1)"``,
+        ``"@degrade(2-3,cap=1)"`` — the form `Collectives.repair` and the
+        launch drivers' ``--inject-fault`` take."""
+        m = _TRANSFORM_RE.fullmatch(text.strip())
+        if not m:
+            raise TopologySpecError(
+                f"malformed transform {text!r} (expected '@name(a-b,k=v)')")
+        return cls.parse(m.group("name"), m.group("body"))
+
+    @classmethod
     def parse(cls, name: str, body: str) -> "TransformSpec":
         args: Tuple[int, ...] = ()
         kwargs = {}

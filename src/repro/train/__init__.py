@@ -4,5 +4,6 @@ from .train_step import (TrainConfig, init_train_state,  # noqa: F401
                          loss_and_grad, make_train_step)
 from .data import DataConfig, host_batch_slice, make_global_batch  # noqa: F401
 from . import checkpoint  # noqa: F401
-from .fault_tolerance import (StragglerMonitor, TrainSupervisor,  # noqa: F401
+from .fault_tolerance import (FaultInjector, LinkFault,  # noqa: F401
+                              StragglerMonitor, TrainSupervisor,
                               elastic_plan)

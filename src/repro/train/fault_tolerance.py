@@ -16,6 +16,14 @@ cluster may have a different device count.  The pieces here:
   whether the global batch must be re-split; checkpoint restore +
   device_put with the new NamedSharding completes the elastic restart
   (checkpoints are host-side full arrays, so any mesh can load them).
+* `LinkFault` / `FaultInjector` — a typed mid-step failure for a dead
+  fabric link.  Unlike a host crash, the training state is intact when a
+  link dies (the step raised before committing), so `TrainSupervisor`
+  routes it to the `on_link_fault` hook — online schedule repair + hot
+  swap (`repro.comms.mesh_axes.CollectiveContext.hot_swap`) — and retries
+  the *same* step without restoring a checkpoint.  The injector exists so
+  tests and the launch drivers (``--inject-fault step:u-v``) can exercise
+  that path deterministically.
 """
 from __future__ import annotations
 
@@ -25,6 +33,46 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from . import checkpoint as ckpt
+
+
+class LinkFault(RuntimeError):
+    """A fabric link (u, v) died mid-step.  Carries the transform text the
+    repair path needs (``@fail(u-v)``)."""
+
+    def __init__(self, u: int, v: int, message: Optional[str] = None):
+        super().__init__(message or f"link {u}-{v} failed")
+        self.u = int(u)
+        self.v = int(v)
+
+    @property
+    def transform_text(self) -> str:
+        return f"@fail({self.u}-{self.v})"
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Raise one `LinkFault` when training reaches `at_step` — the
+    deterministic stand-in for a mid-run link failure."""
+    at_step: int
+    u: int
+    v: int
+    fired: bool = False
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultInjector":
+        """``"step:u-v"`` — e.g. ``"3:0-1"`` fails link 0-1 at step 3."""
+        try:
+            step_s, link = text.split(":", 1)
+            u_s, v_s = link.split("-", 1)
+            return cls(at_step=int(step_s), u=int(u_s), v=int(v_s))
+        except ValueError as e:
+            raise ValueError(
+                f"malformed fault spec {text!r} (expected 'step:u-v')") from e
+
+    def check(self, step: int) -> None:
+        if not self.fired and step == self.at_step:
+            self.fired = True
+            raise LinkFault(self.u, self.v)
 
 
 @dataclasses.dataclass
@@ -42,10 +90,16 @@ class StragglerMonitor:
             self.flagged.append((step, dt))
             if self.on_straggler:
                 self.on_straggler(step, dt)
-        # EWMA excludes outliers so one straggler doesn't mask the next
-        if not is_straggler:
-            self.ewma = dt if self.ewma is None else \
-                (1 - self.alpha) * self.ewma + self.alpha * dt
+        # Clamp outliers to threshold× the mean instead of dropping them:
+        # one spike still can't swamp the EWMA, but a *persistent* slowdown
+        # walks the mean up geometrically until the new speed stops being
+        # flagged (dropping flagged samples froze the mean at the old speed
+        # and flagged every step forever).
+        if self.ewma is None:
+            self.ewma = dt
+        else:
+            capped = min(dt, self.threshold * self.ewma)
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * capped
         return is_straggler
 
 
@@ -67,10 +121,13 @@ def elastic_plan(old_devices: int, new_devices: int, global_batch: int,
         "microbatch_scale": 1,
     }
     if global_batch % new_data:
-        # keep global batch by accumulating: smallest integer scale s.t.
-        # (global_batch / micro) divides the data axis
-        scale = math.lcm(new_data, global_batch) // global_batch
-        plan["microbatch_scale"] = scale
+        # keep global batch by accumulating: the smallest scale with
+        # new_data | global_batch·scale is new_data / gcd(global_batch,
+        # new_data) — each of the `scale` accumulation passes feeds
+        # global_batch·scale/new_data examples per data shard, and the
+        # summed gradient covers exactly `global_batch` examples.
+        plan["microbatch_scale"] = new_data // math.gcd(global_batch,
+                                                        new_data)
     return plan
 
 
@@ -80,6 +137,14 @@ class TrainSupervisor:
     ckpt_every: int = 50
     keep: int = 3
     max_restarts: int = 3
+    #: link faults take this path instead of checkpoint restore: the hook
+    #: (typically `CollectiveContext.hot_swap` + logging) repairs the
+    #: communication schedules for the degraded fabric, and the SAME step
+    #: is retried on the intact state — no work is lost.  Budgeted
+    #: separately from `max_restarts` (a repaired fabric is a recovery,
+    #: not a crash).
+    on_link_fault: Optional[Callable[[LinkFault], None]] = None
+    max_link_faults: int = 3
     monitor: StragglerMonitor = dataclasses.field(
         default_factory=StragglerMonitor)
 
@@ -91,9 +156,12 @@ class TrainSupervisor:
         """step_fn(step, state) -> (state, metrics).  Returns final state.
 
         Any exception triggers restore-from-latest + replay (data is pure
-        in step, so replayed steps are identical)."""
+        in step, so replayed steps are identical) — except a `LinkFault`
+        with `on_link_fault` set, which repairs in place and retries the
+        step without touching checkpoints."""
         step = start_step
         restarts = 0
+        link_faults = 0
         while step < num_steps:
             try:
                 t0 = time.perf_counter()
@@ -112,6 +180,19 @@ class TrainSupervisor:
                     ckpt.gc_old(self.ckpt_dir, self.keep)
             except KeyboardInterrupt:
                 raise
+            except LinkFault as e:
+                if self.on_link_fault is None:
+                    raise       # no repair path configured: a real crash
+                link_faults += 1
+                if link_faults > self.max_link_faults:
+                    raise RuntimeError(
+                        f"exceeded {self.max_link_faults} link faults") from e
+                log(f"[ft] link fault at step {step} ({e}); repairing "
+                    f"schedules in place (fault {link_faults}/"
+                    f"{self.max_link_faults})")
+                self.on_link_fault(e)
+                # state is intact (the step raised before committing):
+                # retry the same step on the repaired fabric, no restore
             except Exception as e:  # noqa: BLE001 — any failure: restart
                 restarts += 1
                 if restarts > self.max_restarts:
@@ -125,7 +206,6 @@ class TrainSupervisor:
                 log(f"[ft] step {step} failed ({type(e).__name__}: {e}); "
                     f"restoring step {last} (restart {restarts}/"
                     f"{self.max_restarts})")
-                state, step = ckpt.restore(self.ckpt_dir, state), last
-                state = state[0]
+                state, step = ckpt.restore(self.ckpt_dir, state, step=last)
         ckpt.wait_pending()
         return state, step

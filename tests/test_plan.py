@@ -309,7 +309,7 @@ def test_sweep_rows_carry_stage_timings(tmp_path):
     doc = run_sweep(names=("ring8",), jobs=1,
                     collectives=("allgather", "allreduce"),
                     out_path=str(tmp_path / "bench.json"))
-    assert doc["version"] == 4
+    assert doc["version"] == 5
     assert doc["fixed_k"] is None
     by_kind = {e["kind"]: e for e in doc["entries"]}
     for e in doc["entries"]:

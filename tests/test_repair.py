@@ -1,0 +1,304 @@
+"""Online schedule repair (`repro.core.repair` + `Collectives.repair`):
+byte-equality of repaired artifacts against cold compiles across the
+whole zoo, warm-path engagement, the v5 `.repair` cache sidecars, and
+`CollectiveContext.hot_swap`."""
+import json
+
+import pytest
+
+from repro.api import Collectives
+from repro.cache.serialize import allreduce_to_json, schedule_to_json
+from repro.cache.sweep import LARGE_NAMES
+from repro.core import plan as plan_mod
+from repro.core.repair import (WARM, RepairError, RepairReport,
+                               repair_artifact, repair_schedule)
+from repro.topo.spec import TopologySpec, TransformSpec, zoo_specs
+from repro.topo.zoo import fail_link
+
+SMALL_ZOO = sorted(n for n in zoo_specs() if n not in LARGE_NAMES)
+
+
+def compile_cold(kind, g, num_chunks=4, root=None):
+    p = plan_mod.plan_for(kind, g, num_chunks=num_chunks, root=root)
+    return plan_mod.emit(plan_mod.rounds(plan_mod.pack(
+        plan_mod.split(plan_mod.solve(p)))))
+
+
+# ---------------------------------------------------------------------- #
+# choosing a valid fault per topology (each zoo graph has different link
+# capacities, and failing a cut edge would disconnect the fabric)
+# ---------------------------------------------------------------------- #
+
+def _symmetric_links(g):
+    return sorted((u, v) for (u, v), c in g.cap.items()
+                  if u < v and g.cap.get((v, u)) == c)
+
+
+def _connected(g):
+    """Every node touched by capacity (plus every compute node) mutually
+    reachable — `is_eulerian` only checks degree balance, not cuts."""
+    nodes = {u for e in g.cap for u in e} | set(g.compute)
+    if not nodes:
+        return False
+    fwd, rev = {}, {}
+    for (u, v) in g.cap:
+        fwd.setdefault(u, []).append(v)
+        rev.setdefault(v, []).append(u)
+
+    def reach(adj):
+        start = min(nodes)
+        seen, stack = {start}, [start]
+        while stack:
+            for y in adj.get(stack.pop(), ()):
+                if y not in seen:
+                    seen.add(y)
+                    stack.append(y)
+        return seen
+
+    return nodes <= reach(fwd) and nodes <= reach(rev)
+
+
+def pick_fail(g):
+    """First symmetric link whose removal keeps the graph Eulerian AND
+    connected, as ``@fail(u-v)`` text; None when no link survives."""
+    for u, v in _symmetric_links(g):
+        try:
+            if _connected(fail_link(g, u, v)):
+                return f"@fail({u}-{v})"
+        except ValueError:
+            continue
+    return None
+
+
+def pick_degrade(g):
+    """First symmetric link with capacity headroom, degraded by one unit;
+    None on unit-capacity fabrics (degrade_link requires 0 < cap < cur)."""
+    for u, v in _symmetric_links(g):
+        if g.cap[(u, v)] >= 2:
+            return f"@degrade({u}-{v},cap={g.cap[(u, v)] - 1})"
+    return None
+
+
+# ---------------------------------------------------------------------- #
+# zoo-wide byte equality: repaired == cold compile of the degraded spec
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("picker", [pick_fail, pick_degrade],
+                         ids=["fail", "degrade"])
+@pytest.mark.parametrize("name", SMALL_ZOO)
+def test_zoo_repair_bytes_equal_cold(name, picker):
+    base = zoo_specs()[name].build()
+    tr = picker(base)
+    if tr is None:
+        pytest.skip(f"{name}: no applicable link for {picker.__name__}")
+    WARM.clear()
+    art = compile_cold("allgather", base)
+    cold = compile_cold("allgather",
+                        TransformSpec.parse_text(tr).apply(base))
+    rep, report = repair_schedule(art, tr)
+    assert schedule_to_json(rep) == schedule_to_json(cold)
+    assert report.verified
+    assert report.transform == str(TransformSpec.parse_text(tr))
+    assert report.base_topology == base.name
+
+
+@pytest.mark.parametrize("kind,root", [("reduce_scatter", None),
+                                       ("broadcast", 0), ("reduce", 2)])
+def test_repair_other_kinds_bytes_equal(kind, root):
+    base = TopologySpec.parse("multipod:2x4").build()
+    tr = "@degrade(0-9,cap=5)"
+    WARM.clear()
+    art = compile_cold(kind, base, root=root)
+    cold = compile_cold(kind, TransformSpec.parse_text(tr).apply(base),
+                        root=root)
+    rep, report = repair_schedule(art, tr)
+    assert schedule_to_json(rep) == schedule_to_json(cold)
+    if root is not None:
+        assert rep.root == root
+        assert report.solve_rounds == 0     # Appendix-A rooted path
+
+
+def test_repair_allreduce_composes_both_halves():
+    base = TopologySpec.parse("fig1a").build()
+    tr = "@fail(0-9)"
+    coll = Collectives(num_chunks=4)
+    ar = coll.schedule(base, kind="allreduce")
+    rep, report = repair_artifact(ar, tr)
+    cold = coll.schedule(TransformSpec.parse_text(tr).apply(base),
+                         kind="allreduce")
+    assert allreduce_to_json(rep) == allreduce_to_json(cold)
+    assert report.kind == "allreduce"
+    assert report.verified
+
+
+# ---------------------------------------------------------------------- #
+# warm paths: the whole point of repair vs recompiling
+# ---------------------------------------------------------------------- #
+
+def test_repair_engages_warm_solve_and_split():
+    """On a switched fabric under an optimum-preserving degrade, both the
+    solve-network transplant and the split trace replay must engage (the
+    perf gate in tools/perf_smoke.py times exactly this configuration)."""
+    base = TopologySpec.parse("fig1a").build()
+    WARM.clear()
+    art = compile_cold("allgather", base)
+    _, report = repair_schedule(art, "@degrade(0-9,cap=9)")
+    assert report.warm_solve
+    assert report.warm_split
+    assert not report.cached
+
+
+def test_repair_cold_fallback_still_exact():
+    """With the warm store emptied (base compiled in another process, or
+    evicted), repair falls back to cold oracle state but stays exact."""
+    base = TopologySpec.parse("fig1a").build()
+    WARM.clear()
+    art = compile_cold("allgather", base)
+    WARM.clear()                          # simulate eviction
+    cold = compile_cold(
+        "allgather",
+        TransformSpec.parse_text("@degrade(0-9,cap=9)").apply(base))
+    rep, report = repair_schedule(art, "@degrade(0-9,cap=9)")
+    assert not report.warm_solve and not report.warm_split
+    assert schedule_to_json(rep) == schedule_to_json(cold)
+
+
+# ---------------------------------------------------------------------- #
+# error surface
+# ---------------------------------------------------------------------- #
+
+def test_repair_rejects_inapplicable_transform():
+    art = compile_cold("allgather", TopologySpec.parse("fig1a").build())
+    with pytest.raises(RepairError, match="does not apply"):
+        repair_schedule(art, "@fail(90-91)")
+    with pytest.raises(RepairError, match="does not apply"):
+        # 0-8 is a unit-capacity compute->switch link: nothing to degrade
+        repair_schedule(art, "@degrade(0-8,cap=1)")
+
+
+def test_repair_rejects_fixed_k_compiles():
+    coll = Collectives(num_chunks=4, fixed_k=2)
+    art = coll.schedule("bring:8,cap=2")
+    with pytest.raises(RepairError):
+        coll.repair(art, "@degrade(0-1,cap=1)")
+
+
+def test_report_roundtrips_and_ignores_future_fields():
+    _, report = repair_artifact(
+        compile_cold("allgather", TopologySpec.parse("fig1a").build()),
+        "@fail(0-9)")
+    d = report.to_dict()
+    d["some_v6_field"] = 1                # forward compat: extra keys drop
+    back = RepairReport.from_dict(d)
+    assert back == RepairReport.from_dict(report.to_dict())
+    assert back.transform == "@fail(0-9)"
+
+
+# ---------------------------------------------------------------------- #
+# v5 cache: transform-keyed .repair sidecars + natural-key artifacts
+# ---------------------------------------------------------------------- #
+
+def test_repair_cache_sidecar_replay(tmp_path):
+    coll = Collectives(cache=tmp_path, num_chunks=4)
+    tr = "@degrade(0-9,cap=5)"
+    art = coll.schedule("fig1a")
+    rep1, r1 = coll.repair(art, tr)
+    assert not r1.cached
+    sidecars = list(tmp_path.glob("*.repair"))
+    assert len(sidecars) == 1
+    doc = json.loads(sidecars[0].read_text())
+    assert doc["format"] == "repro.repair"
+    assert doc["transform"] == tr
+    assert doc["base_fingerprint"] == art.topo.fingerprint()
+
+    # replay: same (base, transform) never recompiles; the report keeps
+    # the ORIGINAL wall time and flags cached=True
+    rep2, r2 = coll.repair(art, tr)
+    assert r2.cached
+    assert r2.repair_time_s == r1.repair_time_s
+    assert schedule_to_json(rep2) == schedule_to_json(rep1)
+
+    # the artifact sits under its natural degraded-topology key: a plain
+    # schedule() of the degraded spec (fresh facade, same cache dir) hits
+    # it instead of compiling
+    coll2 = Collectives(cache=tmp_path, num_chunks=4)
+    direct = coll2.schedule(f"fig1a{tr}")
+    assert schedule_to_json(direct) == schedule_to_json(rep1)
+
+
+def test_repair_cache_dangling_sidecar_is_miss(tmp_path):
+    coll = Collectives(cache=tmp_path, num_chunks=4)
+    art = coll.schedule("fig1a")
+    rep1, _ = coll.repair(art, "@fail(0-9)")
+    doc = json.loads(next(tmp_path.glob("*.repair")).read_text())
+    (tmp_path / f"{doc['artifact_key']}.json").unlink()
+    # fresh facade (no in-memory memo of the evicted artifact): the
+    # dangling sidecar degrades to a clean miss and the repair re-runs
+    coll2 = Collectives(cache=tmp_path, num_chunks=4)
+    rep2, r2 = coll2.repair(art, "@fail(0-9)")
+    assert not r2.cached
+    assert schedule_to_json(rep2) == schedule_to_json(rep1)
+
+
+def test_repair_cache_clear_removes_sidecars(tmp_path):
+    coll = Collectives(cache=tmp_path, num_chunks=4)
+    coll.repair(coll.schedule("fig1a"), "@fail(0-9)")
+    assert list(tmp_path.glob("*.repair"))
+    coll.cache.clear()
+    assert not list(tmp_path.glob("*.repair"))
+    assert not list(tmp_path.glob("*.json"))
+
+
+def test_repair_accepts_spec_instead_of_artifact(tmp_path):
+    coll = Collectives(cache=tmp_path, num_chunks=4)
+    rep, report = coll.repair("fig1a", "@degrade(0-9,cap=5)")
+    assert report.base_topology == coll.topology("fig1a").name
+    assert schedule_to_json(rep) == schedule_to_json(
+        coll.schedule("fig1a@degrade(0-9,cap=5)"))
+
+
+# ---------------------------------------------------------------------- #
+# hot swap: the online path the fault-tolerance loop drives
+# ---------------------------------------------------------------------- #
+
+def test_hot_swap_repairs_every_compiled_program():
+    from repro.comms import CollectiveContext
+    coll = Collectives(num_chunks=4)
+    ctx = CollectiveContext({"data": 8, "model": 1},
+                            topologies={"data": "bring:8,cap=2"},
+                            collectives=coll)
+    ctx.axis("data")
+    ctx.allreduce_schedule("data")
+    ctx.broadcast_program("data", root=0)
+
+    reports = ctx.hot_swap("@degrade(0-1,cap=1)")
+    assert set(reports) == {"data"}
+    kinds = sorted(r.kind for r in reports["data"])
+    assert kinds == ["allgather", "allreduce", "broadcast", "reduce_scatter"]
+
+    # the swapped-in programs are exactly a cold compile of the degraded
+    # fabric, and later compiles see the degraded topology
+    deg = TransformSpec.parse_text("@degrade(0-1,cap=1)").apply(
+        TopologySpec.parse("bring:8,cap=2").build())
+    assert ctx.topology("data").cap[(0, 1)] == 1
+    assert schedule_to_json(ctx.axis("data").ag_sched) == \
+        schedule_to_json(coll.schedule(deg, kind="allgather"))
+    assert allreduce_to_json(ctx.allreduce_schedule("data")) == \
+        allreduce_to_json(coll.schedule(deg, kind="allreduce"))
+
+
+def test_hot_swap_untouched_axes_and_atomicity():
+    from repro.comms import CollectiveContext
+    ctx = CollectiveContext({"data": 8, "model": 1},
+                            topologies={"data": "bring:8,cap=2"},
+                            collectives=Collectives(num_chunks=4))
+    before = schedule_to_json(ctx.axis("data").ag_sched)
+    # no axis carries link 90-91: must raise and leave programs untouched
+    with pytest.raises(ValueError, match="applies to no axis"):
+        ctx.hot_swap("@fail(90-91)")
+    # a fault that disconnects the ring raises mid-repair; the staged
+    # commit means the context still serves the intact programs
+    with pytest.raises((ValueError, RepairError)):
+        ctx.hot_swap("@degrade(0-1,cap=0)")
+    assert schedule_to_json(ctx.axis("data").ag_sched) == before
+    assert ctx.topology("data").cap[(0, 1)] == 2

@@ -36,3 +36,26 @@ def test_engine_greedy_determinism():
                            max_new_tokens=8))
         outs.append(eng.run()[0].tokens)
     np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_launch_serve_survives_injected_link_fault(tmp_path):
+    """--inject-fault u-v between boot and parameter distribution: the
+    driver hot-swaps the repaired model-axis broadcast program and still
+    distributes parameters and serves every request over the degraded
+    fabric."""
+    import os
+    import subprocess
+    import sys
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-8b",
+         "--reduced", "--host-devices", "4", "--model-parallel", "4",
+         "--requests", "2", "--new-tokens", "4",
+         "--inject-fault", "0-1"],
+        capture_output=True, text=True, timeout=600,
+        env=dict(os.environ, PYTHONPATH=src))
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-2000:]}"
+    assert "[repair] injected link 0-1 failed" in out.stdout
+    assert "[repair] axis model broadcast" in out.stdout
+    assert "params distributed via tree broadcast" in out.stdout
+    assert out.stdout.count("req ") == 2

@@ -147,3 +147,136 @@ def test_launch_pipeline_collectives(tmp_path):
     # the launch warmed the artifact cache (allreduce + per-axis pair)
     assert any((tmp_path / "cache").glob("allreduce-*.json")), \
         list((tmp_path / "cache").iterdir())
+
+
+def test_supervisor_restore_resumes_exact_step():
+    """Regression for the restore tuple-unpack bug: after a crash the
+    supervisor must resume from the checkpoint's (state, step) — replaying
+    the exact steps since the last save, not a mangled state tuple."""
+    seen = []
+
+    def step_fn(step, state):
+        seen.append(step)
+        if step == 7 and seen.count(7) == 1:
+            raise RuntimeError("injected crash")
+        return {"n": state["n"] + 1}, {}
+
+    with tempfile.TemporaryDirectory() as d:
+        sup = TrainSupervisor(ckpt_dir=d, ckpt_every=3, max_restarts=1)
+        state, final = sup.run(state={"n": jnp.zeros(())}, num_steps=10,
+                               step_fn=step_fn, log=lambda s: None)
+    assert final == 10
+    # crash at 7 restores the step-6 checkpoint and replays 6..9
+    assert seen == [0, 1, 2, 3, 4, 5, 6, 7, 6, 7, 8, 9]
+    assert int(state["n"]) == 10
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_elastic_plan_preserves_global_batch(seed):
+    """Property: microbatch_scale is the MINIMAL positive integer making
+    global_batch * scale divisible by the new data axis, so the summed
+    gradient covers exactly the configured global batch."""
+    rng = np.random.default_rng(seed)
+    mp = int(rng.choice([1, 2, 4, 8, 16]))
+    new_data = int(rng.integers(1, 64))
+    gb = int(rng.integers(1, 512))
+    plan = elastic_plan(old_devices=new_data * mp * 2,
+                        new_devices=new_data * mp,
+                        global_batch=gb, model_parallel=mp)
+    scale = plan["microbatch_scale"]
+    assert plan["mesh_shape"] == (new_data, mp)
+    assert scale >= 1
+    assert (gb * scale) % new_data == 0
+    for s in range(1, scale):
+        assert (gb * s) % new_data != 0
+
+
+def test_straggler_monitor_converges_on_persistent_slowdown():
+    """A sustained slowdown is flagged at first, then the EWMA walks up to
+    the new speed and the flagging stops (the old behaviour dropped
+    flagged samples, freezing the mean and flagging every step forever)."""
+    from repro.train import StragglerMonitor
+    m = StragglerMonitor()
+    for i in range(10):
+        assert not m.observe(i, 1.0)
+    flags = [m.observe(10 + i, 5.0) for i in range(60)]
+    assert flags[0]                       # the jump itself is a straggler
+    assert not any(flags[-20:])           # ...but the monitor adapts
+    assert m.ewma == pytest.approx(5.0, rel=0.05)
+    assert len(m.flagged) < 15            # finitely many flags, not 60
+
+
+def test_fault_injector_parse():
+    from repro.train import FaultInjector
+    inj = FaultInjector.parse("3:0-12")
+    assert (inj.at_step, inj.u, inj.v) == (3, 0, 12)
+    for bad in ("", "3", "0-1", "a:0-1", "3:01", "3:a-b"):
+        with pytest.raises(ValueError):
+            FaultInjector.parse(bad)
+
+
+def test_supervisor_link_fault_retries_same_step_without_restore():
+    from repro.train import FaultInjector, LinkFault
+    inj = FaultInjector.parse("4:2-3")
+    seen, hooked = [], []
+
+    def step_fn(step, state):
+        inj.check(step)
+        seen.append(step)
+        return {"n": state["n"] + 1}, {}
+
+    with tempfile.TemporaryDirectory() as d:
+        sup = TrainSupervisor(ckpt_dir=d, ckpt_every=100,
+                              on_link_fault=hooked.append)
+        state, final = sup.run(state={"n": jnp.zeros(())}, num_steps=8,
+                               step_fn=step_fn, log=lambda s: None)
+    assert final == 8
+    # the faulted step is retried in place: no step skipped, none replayed
+    assert seen == list(range(8))
+    assert int(state["n"]) == 8
+    assert len(hooked) == 1 and isinstance(hooked[0], LinkFault)
+    assert (hooked[0].u, hooked[0].v) == (2, 3)
+    assert hooked[0].transform_text == "@fail(2-3)"
+
+
+def test_supervisor_link_fault_budget_and_no_hook():
+    from repro.train import LinkFault
+
+    def always_faulting(step, state):
+        raise LinkFault(0, 1)
+
+    with tempfile.TemporaryDirectory() as d:
+        sup = TrainSupervisor(ckpt_dir=d, on_link_fault=lambda e: None,
+                              max_link_faults=2)
+        with pytest.raises(RuntimeError, match="exceeded 2 link faults"):
+            sup.run(state={"n": jnp.zeros(())}, num_steps=4,
+                    step_fn=always_faulting, log=lambda s: None)
+        # without a repair hook a LinkFault is a real crash: it propagates
+        # instead of burning the checkpoint-restart budget
+        sup2 = TrainSupervisor(ckpt_dir=d)
+        with pytest.raises(LinkFault):
+            sup2.run(state={"n": jnp.zeros(())}, num_steps=4,
+                     step_fn=always_faulting, log=lambda s: None)
+
+
+def test_launch_train_survives_injected_link_fault(tmp_path):
+    """End-to-end ISSUE acceptance: --inject-fault step:u-v on the pipeline
+    collectives path.  The LinkFault reaches the supervisor, hot_swap
+    repairs the data-axis schedules in place, the step is retried, and the
+    run completes every step."""
+    import subprocess
+    import sys
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-8b",
+         "--reduced", "--steps", "3", "--host-devices", "4",
+         "--data-parallel", "4", "--collectives", "pipeline",
+         "--inject-fault", "1:0-1",
+         "--ckpt-dir", str(tmp_path / "ckpt"), "--ckpt-every", "100"],
+        capture_output=True, text=True, timeout=600,
+        env=dict(os.environ, PYTHONPATH=src))
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-2000:]}"
+    assert "[ft] link fault at step 1" in out.stdout
+    assert "[repair] axis data" in out.stdout
+    assert "done at step 3" in out.stdout
+    assert "link faults repaired: True" in out.stdout

@@ -13,6 +13,14 @@ baseline — including the large-topology rows.  Per-stage `compile_stats`
 of the worst offenders are printed on failure so the regression points at
 a stage, not just a number.
 
+The gate also exercises online schedule repair (`repro.core.repair`): for
+every pair in `REPAIR_GATE_PAIRS` — switched fabrics under optimum-
+preserving degrades, where the warm solve/split transplant pays — the
+repaired artifact must (a) be byte-identical to the cold compile of the
+degraded topology and (b) beat it on wall time (``repair_time_s <
+cold_compile_time_s``, best-of-N to de-noise), failing the workflow
+otherwise.
+
     python tools/perf_smoke.py                       # run + compare
     python tools/perf_smoke.py --measured /tmp/BENCH_smoke.json
 """
@@ -21,6 +29,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
@@ -31,6 +40,55 @@ sys.path.insert(0, str(REPO / "src"))
 #: a ratio over a near-zero baseline is all timer noise.
 GATED_STAGES = ("split", "pack")
 ABS_FLOOR = 0.05
+
+#: (base spec, transform) pairs the repair gate times: switched topologies
+#: under degrades that preserve the base optimum, so the warm transplant +
+#: trace replay engages.  Harsh transforms that change (U, k) fall back to
+#: cold split by design and are NOT gated on time (only on bytes, via the
+#: sweep's --repair section and tests/test_repair.py).
+REPAIR_GATE_PAIRS = (
+    ("fig1a", "@degrade(0-9,cap=9)"),
+    ("multipod:2x4", "@degrade(0-9,cap=9)"),
+    ("meshdgx:2x2x4", "@degrade(0-1,cap=3)"),
+)
+
+
+def run_repair_gate(repeats: int = 3, num_chunks: int = 4):
+    """Best-of-`repeats` cold vs repair wall time per gated pair.  Returns
+    ``[(spec, transform, cold_s, repair_s, bytes_equal), ...]``.  Repair
+    runs with verify=False so both sides time exactly the compile pipeline
+    (the byte comparison against the verified cold artifact still pins
+    correctness)."""
+    from repro.cache.serialize import schedule_to_json
+    from repro.core import plan as plan_mod
+    from repro.core.repair import WARM, repair_schedule
+    from repro.topo.spec import TopologySpec, TransformSpec
+
+    def pipeline(g):
+        p = plan_mod.plan_for("allgather", g, num_chunks=num_chunks,
+                              root=None)
+        return plan_mod.emit(plan_mod.rounds(plan_mod.pack(
+            plan_mod.split(plan_mod.solve(p)))))
+
+    results = []
+    for base_s, tr in REPAIR_GATE_PAIRS:
+        base = TopologySpec.parse(base_s).build()
+        deg = TransformSpec.parse_text(tr).apply(base)
+        best_cold = best_rep = float("inf")
+        bytes_equal = True
+        for _ in range(repeats):
+            WARM.clear()
+            art = pipeline(base)            # warms the oracle store
+            t0 = time.perf_counter()
+            cold = pipeline(deg)
+            best_cold = min(best_cold, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            rep_art, _ = repair_schedule(art, tr, verify=False)
+            best_rep = min(best_rep, time.perf_counter() - t0)
+            bytes_equal &= (schedule_to_json(rep_art)
+                            == schedule_to_json(cold))
+        results.append((base_s, tr, best_cold, best_rep, bytes_equal))
+    return results
 
 
 def gate_names():
@@ -67,6 +125,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--factor", type=float, default=1.25,
                     help="fail when measured > factor * baseline (total "
                          "and per gated stage)")
+    ap.add_argument("--repair-repeats", type=int, default=3,
+                    help="best-of-N repeats for the repair gate timings "
+                         "(0 skips the repair gate)")
     return ap
 
 
@@ -107,6 +168,18 @@ def main(argv=None) -> int:
               f"(budget {budget:.3f}s = {args.factor:.2f}x)")
     print(f"perf-smoke: {len(pairs)} (topology, kind) pairs over "
           f"{sorted({n for n, _ in pairs})}")
+
+    if args.repair_repeats > 0:
+        for spec, tr, cold_s, rep_s, same in \
+                run_repair_gate(repeats=args.repair_repeats):
+            ok = same and rep_s < cold_s
+            if not ok:
+                failed.append(f"repair:{spec}{tr}")
+            print(f"perf-smoke[repair:{spec}{tr}]"
+                  f"[{'OK' if ok else 'FAIL'}]: repair {rep_s:.3f}s vs "
+                  f"cold {cold_s:.3f}s ({rep_s / cold_s:.2f}x) "
+                  f"bytes_equal={same}")
+
     if not failed:
         return 0
     worst = sorted((e for e in measured_doc["entries"]
