@@ -132,7 +132,7 @@ def schedule_gen_scaling() -> None:
 def schedule_sweep(out_path: str, smoke: bool = False,
                    cache_dir: str | None = None,
                    topologies: list[str] | None = None,
-                   full: bool = False) -> None:
+                   full: bool = False, pack_jobs: int = 1) -> None:
     """Parallel zoo sweep; every entry must reproduce its claimed runtime.
     `topologies` specs ride alongside the selected zoo rows (the smoke set
     under --smoke, the whole zoo under --sweep/the full battery), or alone
@@ -147,7 +147,7 @@ def schedule_sweep(out_path: str, smoke: bool = False,
         names = None                     # run_sweep: zoo, or specs alone
     t0 = time.perf_counter()
     doc = run_sweep(names=names, cache_dir=cache_dir, out_path=out_path,
-                    topologies=topologies)
+                    topologies=topologies, pack_jobs=pack_jobs)
     us = (time.perf_counter() - t0) * 1e6
     for e in doc["entries"]:
         row(f"schedule_sweep.{e['name']}", e["compile_time_s"] * 1e6,
@@ -229,6 +229,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "zoo rows under --smoke/--sweep, or alone when "
                          "given by themselves — arbitrary non-zoo fabrics "
                          "without a code edit")
+    ap.add_argument("--pack-jobs", type=int, default=1,
+                    help="process-parallel split+pack within each family "
+                         "(engages when topology-level parallelism is "
+                         "inactive; schedules stay byte-identical)")
     return ap
 
 
@@ -242,7 +246,8 @@ def main(argv: list[str] | None = None) -> None:
     print("name,us_per_call,derived")
     if args.smoke or args.sweep or args.topology is not None:
         schedule_sweep(args.out, smoke=args.smoke, cache_dir=args.cache_dir,
-                       topologies=args.topology, full=args.sweep)
+                       topologies=args.topology, full=args.sweep,
+                       pack_jobs=args.pack_jobs)
         return
     fig1_optimality()
     pipeline_convergence()
@@ -250,7 +255,8 @@ def main(argv: list[str] | None = None) -> None:
     allreduce_rs_ag()
     broadcast_reduce_family()
     schedule_gen_scaling()
-    schedule_sweep(args.out, cache_dir=args.cache_dir)
+    schedule_sweep(args.out, cache_dir=args.cache_dir,
+                   pack_jobs=args.pack_jobs)
     jax_collectives()
 
 

@@ -12,4 +12,4 @@ from .store import CacheStats, ScheduleCache, default_cache_dir  # noqa: F401
 from .sweep import (COLLECTIVES, FIXED_K_COLLECTIVES,  # noqa: F401
                     LARGE_NAMES, PERF_GATE_NAMES, SMOKE_NAMES,
                     claim_mismatches, default_out_path, run_sweep,
-                    sweep_registry)
+                    sweep_one, sweep_registry)

@@ -26,15 +26,15 @@ per-kind compilers.  Each row's ``compile_time_s`` is that kind's
 *marginal* wall time — shared stage work is charged to the kind that
 triggered it, so the rows of one topology sum to its family compile time.
 
-Every v4 row carries the staged compiler's per-stage wall times
-(``compile_stats``: solve/split/pack/rounds seconds) alongside the total
-``compile_time_s``, plus the oracle-engine work counters
-(``oracle_probes`` / ``oracle_augments``: maxflow calls and augmenting
-paths summed over the stages that produced the artifact), so perf work can
-see *which* stage moved and whether oracle reuse is paying off.  Note that
-an artifact emitted from shared plan products reports the shared stages'
-times/counters (the work that *produced* it), which can exceed its own
-marginal ``compile_time_s``.
+Every row carries the staged compiler's per-stage record (BENCH v6
+``compile_stats``: a ``[{stage, seconds, probes, augments}]`` list in
+pipeline order) alongside the total ``compile_time_s``, plus the summed
+oracle-engine work counters (``oracle_probes`` / ``oracle_augments``:
+maxflow calls and augmenting paths over the stages that produced the
+artifact), so perf work can see *which* stage moved and whether oracle
+reuse is paying off.  Note that an artifact emitted from shared plan
+products reports the shared stages' times/counters (the work that
+*produced* it), which can exceed its own marginal ``compile_time_s``.
 
 ``--repair`` (BENCH v5) adds a ``repair`` section: every swept row whose
 spec carries a transform (``*_failed`` / ``*_degraded`` zoo rows,
@@ -92,17 +92,23 @@ BENCH_FORMAT = "repro.bench_schedules"
 # v5: adds the optional ``repair`` section (--repair): per (topology,
 # transform, kind) rows with ``repair_time_s`` vs ``cold_compile_time_s``
 # and the byte-identity verdict of the repaired artifact.
-BENCH_VERSION = 5
+# v6: normalizes ``compile_stats`` from a {stage: seconds} mapping to an
+# aggregatable ``[{stage, seconds, probes, augments}]`` list in pipeline
+# order (see cache README).
+BENCH_VERSION = 6
 SMOKE_NAMES = ("ring8", "hypercube3", "fig1a")
 # the scaled-up zoo rows (64-compute fabrics where split/pack dominate);
 # all of them are committed BENCH rows, and a full sweep document fed to
 # tools/perf_smoke.py --measured gates every one of them
 LARGE_NAMES = ("torus8x8", "torus8x8_failed", "fattree8p4l2h",
-               "fattree8p4l2h_degraded", "dragonfly6x4",
-               "dragonfly6x4_degraded")
-# what the perf gate compiles fresh by default: the smoke rows plus the
-# cheapest scaled-up fabric (the rest are too slow for a per-CI compile)
-PERF_GATE_NAMES = SMOKE_NAMES + ("dragonfly6x4",)
+               "fattree8p4l2h_degraded", "fattree8p4l4h", "dragonfly6x4",
+               "dragonfly6x4_degraded", "torus16x16")
+# what the perf gate compiles fresh by default: the smoke rows plus two
+# scaled-up fabrics — dragonfly6x4 (cheapest 64-compute row) and
+# fattree8p4l2h (the §2.3 pack hot-path poster child, cheap since the
+# fast-substrate packer landed; tools/perf_smoke.py gates its pack stage
+# individually)
+PERF_GATE_NAMES = SMOKE_NAMES + ("dragonfly6x4", "fattree8p4l2h")
 COLLECTIVES = ("allgather", "reduce_scatter", "broadcast", "reduce",
                "allreduce")
 # kinds a --fixed-k sweep exercises (rooted kinds always use k = λ(root))
@@ -158,14 +164,16 @@ def _compile(kind: str, g: DiGraph, num_chunks: int,
 def _compile_family(g: DiGraph, kinds: Sequence[str], num_chunks: int,
                     cache_dir: Optional[str], root: Optional[int],
                     fixed_k: Optional[int], timings: Dict[str, float],
-                    packed: Dict[str, Any]) -> Dict[str, Any]:
+                    packed: Dict[str, Any],
+                    pack_jobs: int = 1) -> Dict[str, Any]:
     """One topology's whole collective family, stages shared across kinds
     (cache-backed when a cache dir is given); `timings` receives per-kind
     marginal wall seconds, `packed` the pre-rounds plans (fresh-compile
-    path only — a cache hit needs no re-rounding plan)."""
+    path only — a cache hit needs no re-rounding plan); ``pack_jobs > 1``
+    packs the independent orientations in worker processes."""
     return Collectives(cache=cache_dir).family(
         g, kinds, num_chunks=num_chunks, fixed_k=fixed_k, root=root,
-        timings=timings, packed_out=packed)
+        timings=timings, packed_out=packed, jobs=pack_jobs)
 
 
 def _rechunked(packed_plan, num_chunks: int):
@@ -192,19 +200,29 @@ def _depth(sched) -> int:
     return sched.depth
 
 
-def _stage_seconds(sched) -> Optional[Dict[str, float]]:
-    """Per-stage compiler wall times of an artifact (allreduce sums its two
-    halves); None when the artifact carries no instrumentation."""
+def _compile_stats(sched) -> Optional[List[Dict[str, Any]]]:
+    """An artifact's per-stage compiler record, normalized (BENCH v6) to an
+    aggregatable ``[{stage, seconds, probes, augments}]`` list in pipeline
+    order — allreduce sums its two halves stage-by-stage.  None when the
+    artifact carries no instrumentation."""
     halves = (sched.rs, sched.ag) \
         if isinstance(sched, schedule_mod.AllReduceSchedule) else (sched,)
-    out: Dict[str, float] = {}
+    order: List[str] = []
+    acc: Dict[str, Dict[str, Any]] = {}
     for half in halves:
         cs = half.compile_stats
         if cs is None:
             continue
-        for stage, secs in cs.stage_seconds().items():
-            out[stage] = round(out.get(stage, 0.0) + secs, 6)
-    return out or None
+        for s in cs.stages:
+            row = acc.get(s.stage)
+            if row is None:
+                order.append(s.stage)
+                row = acc[s.stage] = {"stage": s.stage, "seconds": 0.0,
+                                      "probes": 0, "augments": 0}
+            row["seconds"] = round(row["seconds"] + s.wall_time_s, 6)
+            row["probes"] += int(s.meta.get("probes", 0))
+            row["augments"] += int(s.meta.get("augments", 0))
+    return [acc[stage] for stage in order] or None
 
 
 def _oracle_counters(sched) -> Dict[str, int]:
@@ -259,7 +277,7 @@ def _entry(name: str, kind: str, g: DiGraph, root: Optional[int],
         "num_edges": len(g.cap),
         "num_chunks": num_p,
         "compile_time_s": round(compile_time, 6),
-        "compile_stats": _stage_seconds(sched),
+        "compile_stats": _compile_stats(sched),
         **_oracle_counters(sched),
         "inv_x_star": str(opt.inv_x_star),
         "U": str(opt.U),
@@ -293,8 +311,8 @@ def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
 
 
 def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
-                    cache_dir: Optional[str],
-                    fixed_k: Optional[int]) -> List[Dict[str, Any]]:
+                    cache_dir: Optional[str], fixed_k: Optional[int],
+                    pack_jobs: int = 1) -> List[Dict[str, Any]]:
     """All of one topology's sweep rows, compiled as a single family so
     solve/split/pack are amortized across the collective kinds; each row's
     ``compile_time_s`` is its kind's marginal wall time.
@@ -314,7 +332,7 @@ def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
         timings: Dict[str, float] = {}
         packed: Dict[str, Any] = {}
         arts = _compile_family(g, kinds, num_chunks, cache_dir, root,
-                               fixed_k, timings, packed)
+                               fixed_k, timings, packed, pack_jobs)
     except (EdgeSplitError, ValueError) as e:
         if fixed_k is None:
             raise
@@ -432,7 +450,7 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
               collectives: Optional[Sequence[str]] = None,
               fixed_k: Optional[int] = None,
               topologies: Optional[Sequence[str]] = None,
-              repair: bool = False) -> Dict[str, Any]:
+              repair: bool = False, pack_jobs: int = 1) -> Dict[str, Any]:
     """Sweep the named zoo rows (default: all of them) plus any extra
     `topologies` given as raw spec strings (rows named by the canonical
     spec form); `names` entries may themselves be spec strings.
@@ -440,7 +458,12 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
     ``repair=True`` adds the BENCH v5 ``repair`` section: every swept row
     with a transform is re-derived by online repair from its stripped base
     spec and byte-compared against the cold compile (see
-    `_repair_topology`)."""
+    `_repair_topology`).
+
+    ``pack_jobs > 1`` packs each family's independent orientations/kinds
+    in worker processes (artifacts byte-identical to sequential); it only
+    engages when topology-level `jobs` parallelism is not already
+    saturating the machine."""
     names = list(names) if names is not None else (
         [] if topologies else list(sweep_registry()))
     for text in topologies or ():
@@ -469,11 +492,13 @@ def run_sweep(names: Optional[Sequence[str]] = None, num_chunks: int = 16,
                                              max(1, (os.cpu_count() or 2)))
     if jobs <= 1 or len(names) <= 1:
         grouped = [_sweep_topology(n, collectives, num_chunks, cache_dir,
-                                   fixed_k) for n in names]
+                                   fixed_k, pack_jobs) for n in names]
     else:
+        # topology-level processes already saturate the pool; nesting the
+        # per-family pack pool under them would oversubscribe
         with concurrent.futures.ProcessPoolExecutor(max_workers=jobs) as ex:
             futs = {ex.submit(_sweep_topology, n, collectives, num_chunks,
-                              cache_dir, fixed_k): n
+                              cache_dir, fixed_k, 1): n
                     for n in names}
             grouped = [f.result() for f in futs]
     results = [e for rows in grouped for e in rows]
@@ -550,6 +575,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "cold compile, and timed (repair_time_s vs "
                          "cold_compile_time_s)")
     ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--pack-jobs", type=int, default=1,
+                    help="worker processes for the per-family split/pack "
+                         "stages (pays on single-topology sweeps; ignored "
+                         "when topology-level --jobs parallelism is active)")
     ap.add_argument("--cache-dir", default=None)
     ap.add_argument("--out", default=None,
                     help="output path (default BENCH_schedules.json; a "
@@ -569,7 +598,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     doc = run_sweep(names=names, num_chunks=args.chunks, jobs=args.jobs,
                     cache_dir=args.cache_dir, out_path=args.out,
                     collectives=args.collectives, fixed_k=args.fixed_k,
-                    topologies=args.topology, repair=args.repair)
+                    topologies=args.topology, repair=args.repair,
+                    pack_jobs=args.pack_jobs)
     for e in doc["entries"]:
         print(f"{e['name']}.{e['kind']},{e['compile_time_s'] * 1e6:.1f},"
               f"inv_x*={e['inv_x_star']};k={e['k']};depth={e['depth']};"

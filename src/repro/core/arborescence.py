@@ -23,10 +23,10 @@ practice.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set
 
 from .graph import DiGraph, Edge
-from .maxflow import FlowNetwork, warm_restore
+from .maxflow import FlowNetwork
 
 
 class PackingError(RuntimeError):
@@ -112,25 +112,42 @@ def pack_rooted_trees(dstar: DiGraph,
     while qi < len(queue):
         ci = queue[qi]
         cur = classes[ci]
-        # Theorem-12 gadget networks, one per tail x, kept *across* picks
-        # for the whole growth of this class: a pick no longer rebuilds
-        # them — it applies its residual-capacity delta (and any split-off
-        # class) to every cached gadget in place.
-        gadgets: Dict[int, _MuGadget] = {}
+        # ONE Theorem-12 gadget network for the whole growth of this class,
+        # shared across every candidate tail x (toggleable tail edges — see
+        # `_MuGadget`) and kept *across* picks: a pick applies its residual-
+        # capacity delta (and any split-off class) to the gadget in place.
+        gadget: Optional[_MuGadget] = None
+        # (x, y) candidates whose µ came back <= 0 for this class growth.
+        # µ is monotonically non-increasing while the class grows (picks
+        # only shrink g and want, and a split raises Σm by exactly the
+        # amount F can gain through the grafted s_i), so a rejected
+        # candidate stays rejected — and by the same argument the scan is
+        # *resumable*: after a pick at position (xi, yi) every candidate
+        # before it is still rejected for its original reason (vset only
+        # grows, g never rises, µ never rises), so instead of restarting
+        # the (tail, head) sweep from scratch each pick continues it in
+        # place.  A re-validation pass below guards the invariant: on a
+        # stall the cache is dropped and the sweep restarts from zero once
+        # before the packing condition is declared violated.
+        negative: Set[Edge] = set()
+        revalidated = False
+        xi = yi = 0
         while cur.vset != all_v:
             picked = False
             # candidate edges: BFS-like order (oldest tail vertex first)
-            for x in cur.verts:
-                gadget = gadgets.get(x)
-                for y in sinks:
+            while xi < len(cur.verts):
+                x = cur.verts[xi]
+                while yi < len(sinks):
+                    y = sinks[yi]
+                    yi += 1
                     e = (x, y)
-                    if y in cur.vset or g.get(e, 0) <= 0:
+                    if y in cur.vset or g.get(e, 0) <= 0 or e in negative:
                         continue
                     if gadget is None:
-                        gadget = _MuGadget(dstar, g, classes, ci, x)
-                        gadgets[x] = gadget
-                    mu = gadget.mu(y)
+                        gadget = _MuGadget(dstar, g, classes, ci)
+                    mu = gadget.mu(x, y)
                     if mu <= 0:
+                        negative.add(e)
                         continue
                     rest = None
                     if mu < cur.mult:
@@ -143,13 +160,25 @@ def pack_rooted_trees(dstar: DiGraph,
                         cur.mult = mu
                     cur.add_edge(e)
                     g[e] -= cur.mult
-                    for gd in gadgets.values():
-                        gd.note_pick(e, g[e], rest)
+                    gadget.note_pick(e, g[e], rest)
                     picked = True
+                    revalidated = False
                     break
                 if picked:
                     break
+                xi += 1
+                yi = 0
             if not picked:
+                if negative and not revalidated:
+                    # re-validation pass: the cache rests on µ monotonicity;
+                    # before declaring the packing condition violated, drop
+                    # every cached rejection (and the gadget whose residual
+                    # state produced them) and rescan from scratch once.
+                    negative.clear()
+                    gadget = None
+                    revalidated = True
+                    xi = yi = 0
+                    continue
                 raise PackingError(
                     f"no augmenting edge for root {cur.root} with "
                     f"verts={sorted(cur.vset)} — packing condition violated")
@@ -159,36 +188,44 @@ def pack_rooted_trees(dstar: DiGraph,
 
 
 class _MuGadget:
-    """Theorem 12's auxiliary network D̄ for one tail vertex x, reused
-    across every candidate head y (reset_flow between sinks) *and* across
-    picks: µ for adding edge (x,y) to classes[ci] is
-    min{g(x,y), m(R1), F(x,y; D̄) − Σ m(R_i)}.
+    """Theorem 12's auxiliary network D̄ for the growth of one class,
+    shared across every candidate tail x and head y: µ for adding edge
+    (x,y) to classes[ci] is  min{g(x,y), m(R1), F(x,y; D̄) − Σ m(R_i)}.
 
-    A pick only (a) lowers one residual capacity g(e) and (b) may split off
-    a new incomplete class, so `note_pick` rewrites that one edge and
-    grafts the split class's s_i node in place instead of rebuilding the
-    network (the scan restart used to rebuild every gadget it revisited).
-    Other classes never change while classes[ci] grows, so no other state
-    can go stale.
+    The network D̄ of the paper attaches one node s_i per other
+    *incomplete* class, with an edge x -> s_i of capacity m(R_i) from the
+    candidate tail.  Those tail edges are the only x-dependent part, so
+    instead of one network per tail the gadget routes them through a hub:
+    a single hub node h with h -> s_i of capacity m(R_i), plus a
+    toggleable u -> h edge per compute vertex — exactly one of them (the
+    probed tail's, at the ∞ stand-in) is active per probe.  Every unit of
+    s_i inflow still originates at x and is still capped at m(R_i), so
+    F(x, y) is exactly the paper's value, and switching tails is two
+    capacity writes instead of a network build.
+
+    A pick only (a) lowers one residual capacity g(e) and (b) may split
+    off a new incomplete class, so `note_pick` rewrites that one edge and
+    grafts the split class's s_i node in place (hub edge + ∞ fan-out)
+    instead of rebuilding.  Other classes never change while classes[ci]
+    grows, so no other state can go stale.
 
     The ∞ stand-in only needs to exceed the flow limit Σm + m(R1), and
     Σm + m(R1) is conserved by splits while g only shrinks, so the value
-    sized at build time stays sufficient — the computed µ is identical for
-    any sufficiently large value.
+    sized at build time stays sufficient — the computed µ is identical
+    for any sufficiently large value.
 
-    Warm probes: the gadget tracks a target capacity per edge and keeps a
-    per-head flow snapshot, so re-probing a head y after picks restores y's
-    last x->y flow and applies only the pick deltas (one residual-capacity
-    decrease and a grafted class per pick) instead of recomputing the
-    Σm-unit base flow from zero.  µ is unchanged: a restored flow at or
-    above the limit clamps to `want` exactly as a limit-hit cold maxflow
-    does, and below the limit the re-augmented value is the exact F."""
+    Fast accept: edge (x,y) itself and the Σm − miss(y) units routable
+    x -> h -> s_i -> y through classes that already contain y are
+    edge-disjoint flows, so F ≥ g(x,y) + Σm − miss(y) (miss(y) = Σ m(R_i)
+    over incomplete classes *not* containing y).  When g(x,y) − miss(y)
+    ≥ min{g(x,y), m(R1)} this lower bound already pins µ = want, and the
+    probe returns without running a maxflow at all."""
 
-    __slots__ = ("net", "g", "cur", "x", "sum_m", "inf", "eid", "_tgt",
-                 "_warm")
+    __slots__ = ("net", "g", "cur", "sum_m", "inf", "eid", "tail_eid",
+                 "hub", "miss", "cur_tail")
 
     def __init__(self, dstar: DiGraph, g: Dict[Edge, int],
-                 classes: Sequence[TreeClass], ci: int, x: int):
+                 classes: Sequence[TreeClass], ci: int):
         cur = classes[ci]
         # gadget: one node s_i per other *incomplete* class
         others = [c for j, c in enumerate(classes)
@@ -199,17 +236,24 @@ class _MuGadget:
         edges = [(a, b, c) for (a, b), c in g.items() if c > 0]
         self.eid: Dict[Edge, int] = {
             (a, b): 2 * j for j, (a, b, _) in enumerate(edges)}
+        hub = dstar.num_nodes
+        tails = sorted(dstar.compute)
+        self.tail_eid: Dict[int, int] = {
+            u: 2 * (len(edges) + j) for j, u in enumerate(tails)}
+        edges.extend((u, hub, 0) for u in tails)
         for j, c in enumerate(others):
-            sid = dstar.num_nodes + j
-            edges.append((x, sid, c.mult))
+            sid = hub + 1 + j
+            edges.append((hub, sid, c.mult))
             edges.extend((sid, v, inf) for v in c.verts)
-        self.net = FlowNetwork(dstar.num_nodes + len(others))
+        self.net = FlowNetwork(hub + 1 + len(others))
         self.net.add_edges(edges)
-        self.g, self.cur, self.x = g, cur, x
+        self.g, self.cur = g, cur
         self.sum_m, self.inf = sum_m, inf
-        self._tgt: List[int] = [c for (_, _, c) in edges]
-        # head y -> (cap snapshot, flow value, target snapshot)
-        self._warm: Dict[int, Tuple[List[int], int, List[int]]] = {}
+        self.hub = hub
+        self.miss: Dict[int, int] = {
+            y: sum(c.mult for c in others if y not in c.vset)
+            for y in tails}
+        self.cur_tail: Optional[int] = None
 
     def note_pick(self, e: Edge, new_cap: int,
                   rest: Optional[TreeClass]) -> None:
@@ -220,27 +264,28 @@ class _MuGadget:
         if eid is None:      # e had capacity 0 at build time (cannot
             eid = self.net.add_edge(*e, 0)    # happen: g never grows), but
             self.eid[e] = eid                 # stay safe
-            self._tgt.append(0)
         self.net.set_edge_cap(eid, new_cap)
-        self._tgt[eid >> 1] = new_cap
         if rest is not None:
             sid = self.net.add_node()
-            self.net.add_edge(self.x, sid, rest.mult)
-            self._tgt.append(rest.mult)
+            self.net.add_edge(self.hub, sid, rest.mult)
             self.net.add_edges((sid, v, self.inf) for v in rest.verts)
-            self._tgt.extend(self.inf for _ in rest.verts)
             self.sum_m += rest.mult
+            for y in self.miss:
+                if y not in rest.vset:
+                    self.miss[y] += rest.mult
 
-    def mu(self, y: int) -> int:
-        want = min(self.g[(self.x, y)], self.cur.mult)
+    def mu(self, x: int, y: int) -> int:
+        want = min(self.g[(x, y)], self.cur.mult)
+        if self.g[(x, y)] - self.miss[y] >= want:
+            return want          # lower bound pins µ (see class docstring)
+        if x != self.cur_tail:
+            if self.cur_tail is not None:
+                self.net.set_edge_cap(self.tail_eid[self.cur_tail], 0)
+            self.net.set_edge_cap(self.tail_eid[x], self.inf)
+            self.cur_tail = x
         limit = self.sum_m + want
-        state = self._warm.get(y)
-        if state is None:
-            self.net.reset_flow()
-            f = self.net.maxflow(self.x, y, limit=limit)
-        else:
-            f = warm_restore(self.net, self._tgt, state, self.x, y, limit)
-        self._warm[y] = (list(self.net.cap), f, list(self._tgt))
+        self.net.reset_flow()
+        f = self.net.maxflow(x, y, limit=limit)
         return min(want, f - self.sum_m)
 
 

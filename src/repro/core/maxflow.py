@@ -7,8 +7,26 @@ codebase only ever needs to know whether the flow reaches some threshold
 (Theorems 1, 5, 8, 12), so we stop augmenting as soon as the threshold is
 met — a large constant-factor win.
 
-Capacities are Python ints (arbitrary precision): the optimality search
-scales capacities by binary-search denominators, which can grow large.
+Two substrates back the same `FlowNetwork` API:
+
+* a pure-Python Dinic over adjacency linked lists — the reference-shaped
+  slow path, used for small networks (where interpreter overhead beats
+  array set-up costs), and whenever capacities leave the int64 range
+  (capacities are Python ints, arbitrary precision: the optimality search
+  scales capacities by binary-search denominators);
+* a compact array substrate: capacities live in a numpy int64 array and
+  probes on large networks are solved by `scipy.sparse.csgraph.maximum_flow`
+  (a compiled Dinic) over a cached CSR view of the network.  The CSR
+  structure (coalesced coordinates, group index, residual write-back
+  permutations) is built once per network shape and only capacity *data*
+  moves per probe.  An extra bottleneck node `b` with a single `b -> s`
+  edge of capacity `limit` realises the exact early-exit semantics
+  (`min(F, limit)`) without giving up the compiled inner loops.
+
+Both substrates return exact flow values, so every oracle verdict — and
+therefore every emitted schedule byte — is independent of which one ran.
+The differential suite (`repro.core.reference`,
+`tests/test_reference_differential.py`) pins this equivalence.
 
 Reuse: every binary search in the compiler probes the *same* network shape
 with different capacities, and every Theorem-5-style oracle sweeps the same
@@ -34,17 +52,43 @@ from __future__ import annotations
 from fractions import Fraction
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .graph import DiGraph, Edge
 
+try:
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import maximum_flow as _scipy_maxflow
+    HAVE_SCIPY = True
+except Exception:  # pragma: no cover — scipy is part of the baked image
+    HAVE_SCIPY = False
+
 INF = float("inf")
+
+#: networks with fewer residual-edge entries than this stay on the Python
+#: substrate: one scipy probe costs ~0.5ms of fixed wrapper/validation
+#: work, which swamps a Dinic run on a tiny network.  Tuned on the zoo
+#: (fattree[8p4l2h] pack probes sit just above it, small fixture probes
+#: well below).  Tests monkeypatch this to 0 to force the array substrate
+#: onto small fixtures.
+FAST_MIN_ENTRIES = 384
+
+#: total capacity at or above this bails to the Python substrate: scipy's
+#: maximum_flow silently casts capacities to int32, so every entry *and*
+#: the flow value must stay below 2^31.  Guarding the capacity sum covers
+#: both (each entry and the achievable flow are bounded by the total).
+_FAST_CAP_LIMIT = (1 << 31) - 1
 
 
 class OracleCounters:
     """Per-process maxflow instrumentation: `probes` counts `maxflow`
     invocations (including warm-start drains/reroutes), `augments` counts
-    augmenting paths pushed.  The staged compiler snapshots the global
-    `COUNTERS` around each stage and records the deltas in its stage meta
-    (they surface in BENCH rows as ``oracle_probes`` / ``oracle_augments``)."""
+    augmenting paths pushed by the Python substrate (the scipy substrate
+    does not expose its augmentation count; large-network probes therefore
+    contribute probes but no augments).  The staged compiler snapshots the
+    global `COUNTERS` around each stage and records the deltas in its stage
+    meta (they surface in BENCH rows as ``oracle_probes`` /
+    ``oracle_augments``)."""
 
     __slots__ = ("probes", "augments")
 
@@ -63,19 +107,175 @@ class OracleCounters:
 COUNTERS = OracleCounters()
 
 
-class FlowNetwork:
-    """Residual flow network with integer capacities."""
+def _store(arr: np.ndarray, idx: int, val: int) -> np.ndarray:
+    """Scalar store into a capacity array, promoting to an object-dtype
+    array (arbitrary-precision Python ints) when `val` leaves int64."""
+    try:
+        arr[idx] = val
+        return arr
+    except OverflowError:
+        arr = arr.astype(object)
+        arr[idx] = val
+        return arr
 
-    __slots__ = ("n", "to", "cap", "head", "nxt", "first_free")
+
+def _int_array(vals: Iterable[int]) -> np.ndarray:
+    """int64 array of `vals`, or object dtype when a value doesn't fit."""
+    vals = list(vals)
+    try:
+        return np.array(vals, dtype=np.int64)
+    except OverflowError:
+        return np.array(vals, dtype=object)
+
+
+def _cap_block(caps: Sequence[int]) -> np.ndarray:
+    """Interleave `caps` with their zero reverse capacities, as int64 when
+    the values fit and object dtype otherwise."""
+    try:
+        block = np.zeros(2 * len(caps), dtype=np.int64)
+        block[0::2] = caps
+        return block
+    except OverflowError:
+        block = np.zeros(2 * len(caps), dtype=object)
+        block[0::2] = caps
+        return block
+
+
+def _concat_caps(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    if a.dtype == object or b.dtype == object:
+        return np.concatenate([a.astype(object), b.astype(object)])
+    return np.concatenate([a, b])
+
+
+class _CsrSolver:
+    """Cached CSR structure for one `FlowNetwork` shape, solved by scipy's
+    compiled Dinic.
+
+    Entries 0..m-1 mirror the network's residual-edge entries (entry i is
+    the directed coordinate ``to[i^1] -> to[i]``); entries m..m+2n-1 are
+    the bottleneck gadget: a virtual node ``b = n`` with a coordinate pair
+    ``b <-> u`` for every node u.  Per probe only the data vector changes:
+    real entries carry the current residual capacities and the single
+    ``b -> s`` entry carries the probe's `limit` (the whole flow must cross
+    it, so the solve returns exactly ``min(F(s, t), limit)`` — the same
+    early-exit contract as the Python substrate).
+
+    Parallel entries of one coordinate are coalesced for the solve and the
+    resulting net coordinate flow is distributed back to the entries
+    greedily in edge-id order (a segmented prefix-sum), yielding a valid
+    residual state with the exact flow value.  Which parallel entry carries
+    the flow is not observable: every caller consumes flow *values* (and
+    the canonical min-cut side, which is distribution-independent)."""
+
+    __slots__ = ("m", "n", "order", "gid_sorted", "starts", "partner",
+                 "indices", "indptr", "checked")
+
+    def __init__(self, net: "FlowNetwork"):
+        m, n = len(net.to), net.n
+        self.m, self.n = m, n
+        t = np.asarray(net.to, dtype=np.int64)
+        rows = np.empty(m + 2 * n, dtype=np.int64)
+        cols = np.empty(m + 2 * n, dtype=np.int64)
+        rows[0:m:2] = t[1::2]
+        rows[1:m:2] = t[0::2]
+        cols[:m] = t
+        ar = np.arange(n, dtype=np.int64)
+        rows[m:m + n] = n
+        cols[m:m + n] = ar
+        rows[m + n:] = ar
+        cols[m + n:] = n
+        partner = np.empty(m + 2 * n, dtype=np.int64)
+        partner[:m] = np.arange(m, dtype=np.int64) ^ 1
+        partner[m:m + n] = ar + m + n
+        partner[m + n:] = ar + m
+        order = np.lexsort((cols, rows))
+        r_s, c_s = rows[order], cols[order]
+        newgrp = np.empty(len(order), dtype=bool)
+        newgrp[0] = True
+        newgrp[1:] = (r_s[1:] != r_s[:-1]) | (c_s[1:] != c_s[:-1])
+        self.order = order
+        self.gid_sorted = np.cumsum(newgrp) - 1
+        self.starts = np.flatnonzero(newgrp)
+        self.partner = partner
+        urows = r_s[self.starts]
+        counts = np.bincount(urows, minlength=n + 1)
+        self.indptr = np.concatenate(
+            ([0], np.cumsum(counts))).astype(np.int32)
+        self.indices = c_s[self.starts].astype(np.int32)
+        self.checked = False
+
+    def solve(self, net: "FlowNetwork", s: int, t: int,
+              limit: Optional[int]) -> Optional[int]:
+        """min(F(s, t), limit) on `net`'s current residual capacities, or
+        None when the capacities are too large for scipy's int32 core (the
+        caller falls back to the exact Python substrate)."""
+        m, n = self.m, self.n
+        cap = net.cap
+        # max-check first: it bounds the int64 sum below any wrap, and a
+        # single over-limit entry already forces the fallback
+        if len(cap) and int(cap.max()) >= _FAST_CAP_LIMIT:
+            return None
+        total = int(cap.sum())
+        if total >= _FAST_CAP_LIMIT:
+            return None
+        ec = np.zeros(m + 2 * n, dtype=np.int64)
+        ec[:m] = cap
+        lim = total + 1 if limit is None else min(int(limit), total + 1)
+        if lim <= 0:
+            return 0
+        ec[m + s] = lim
+        ec_s = ec[self.order]
+        # int32 data: scipy's core is int32 (the _FAST_CAP_LIMIT guard
+        # above makes the cast exact) and handing it pre-cast data skips a
+        # full-matrix astype copy inside the wrapper.
+        agg = np.add.reduceat(ec_s, self.starts).astype(np.int32)
+        mat = csr_matrix((agg, self.indices, self.indptr),
+                         shape=(n + 1, n + 1))
+        res = _scipy_maxflow(mat, n, t)
+        flow = res.flow
+        if not self.checked:
+            # scipy preserves the input structure when every coordinate's
+            # reverse is present (ours always is: entries come in pairs)
+            if (len(flow.data) != len(agg)
+                    or not np.array_equal(flow.indices, self.indices)):
+                raise RuntimeError("scipy flow structure mismatch")
+            self.checked = True
+        fpos = np.maximum(flow.data, 0).astype(np.int64)
+        if fpos.any():
+            cs = np.cumsum(ec_s)
+            base = np.concatenate(
+                ([0], cs[self.starts[1:] - 1]))[self.gid_sorted]
+            take_s = np.clip(fpos[self.gid_sorted] - (cs - ec_s - base),
+                             0, ec_s)
+            take = np.empty_like(take_s)
+            take[self.order] = take_s
+            new_ec = ec - take + take[self.partner]
+            cap[:] = new_ec[:m]
+        return int(res.flow_value)
+
+
+class FlowNetwork:
+    """Residual flow network with integer capacities.
+
+    Capacities live in a numpy array (`int64`, promoted to object dtype if
+    a capacity ever leaves the int64 range).  The adjacency linked lists
+    only serve the Python substrate and `min_cut_side`; they are built
+    lazily (`_ensure_adj`) so bulk builders that stay on the array
+    substrate never pay for them."""
+
+    __slots__ = ("n", "to", "cap", "head", "nxt", "_adj_m", "_fast")
 
     def __init__(self, n: int):
         self.n = n
         # edge arrays (paired: edge i and i^1 are residual partners)
         self.to: List[int] = []
-        self.cap: List[int] = []
-        # adjacency as linked lists: head[u] -> edge index, nxt[i] -> next edge
+        self.cap: np.ndarray = np.zeros(0, dtype=np.int64)
+        # adjacency as linked lists: head[u] -> edge index, nxt[i] -> next
+        # edge; valid for the first `_adj_m` entries of `to`
         self.head: List[int] = [-1] * n
         self.nxt: List[int] = []
+        self._adj_m = 0
+        self._fast: Optional[_CsrSolver] = None
 
     def add_node(self) -> int:
         self.head.append(-1)
@@ -85,27 +285,47 @@ class FlowNetwork:
     def add_edge(self, u: int, v: int, cap: int) -> int:
         """Add directed edge u->v with given capacity; returns edge id."""
         i = len(self.to)
-        self.to.append(v); self.cap.append(cap)
-        self.nxt.append(self.head[u]); self.head[u] = i
-        self.to.append(u); self.cap.append(0)
-        self.nxt.append(self.head[v]); self.head[v] = i + 1
+        self.to.append(v)
+        self.to.append(u)
+        if self._adj_m == i:      # adjacency current: extend incrementally
+            self.nxt.append(self.head[u]); self.head[u] = i
+            self.nxt.append(self.head[v]); self.head[v] = i + 1
+            self._adj_m = i + 2
+        self.cap = _concat_caps(self.cap, _cap_block([cap]))
         return i
 
     def add_edges(self, edges: Iterable[Tuple[int, int, int]]) -> None:
         """Bulk `add_edge` for the hot network builders — same layout, one
-        call instead of one per edge.  Edge ids are assigned in order
-        (first edge gets id len(to) before the call, then +2 per edge)."""
-        to, cap, nxt, head = self.to, self.cap, self.nxt, self.head
-        i = len(to)
-        for u, v, c in edges:
-            to.append(v); cap.append(c); nxt.append(head[u]); head[u] = i
-            i += 1
-            to.append(u); cap.append(0); nxt.append(head[v]); head[v] = i
-            i += 1
+        array concatenation instead of one append per edge.  Edge ids are
+        assigned in order (first edge gets id len(to) before the call,
+        then +2 per edge)."""
+        edges = list(edges)
+        if not edges:
+            return
+        to = self.to
+        for u, v, _ in edges:
+            to.append(v)
+            to.append(u)
+        self.cap = _concat_caps(self.cap, _cap_block([c for _, _, c in edges]))
+
+    def _ensure_adj(self) -> None:
+        """(Re)build the adjacency linked lists from `to`.  Insertion order
+        matches per-edge construction exactly, so the Python substrate
+        traverses identically however the edges were added."""
+        to = self.to
+        if self._adj_m == len(to):
+            return
+        head = [-1] * self.n
+        nxt = [0] * len(to)
+        for i in range(len(to)):
+            u = to[i ^ 1]
+            nxt[i] = head[u]
+            head[u] = i
+        self.head, self.nxt, self._adj_m = head, nxt, len(to)
 
     def edge_flow(self, edge_id: int) -> int:
         """Flow currently pushed through edge `edge_id` (reverse residual)."""
-        return self.cap[edge_id ^ 1]
+        return int(self.cap[edge_id ^ 1])
 
     def clone(self) -> "FlowNetwork":
         """Independent copy (arrays duplicated) — the transplant primitive:
@@ -114,24 +334,24 @@ class FlowNetwork:
         dup = FlowNetwork(0)
         dup.n = self.n
         dup.to = list(self.to)
-        dup.cap = list(self.cap)
+        dup.cap = self.cap.copy()
         dup.head = list(self.head)
         dup.nxt = list(self.nxt)
+        dup._adj_m = self._adj_m
+        dup._fast = self._fast    # structure is shape-keyed and immutable
         return dup
 
     def set_edge_cap(self, edge_id: int, cap: int) -> None:
         """Rewrite edge `edge_id`'s capacity in place (clearing any flow on
         it) — the probe primitive that lets one network serve a whole
         binary search instead of being rebuilt per probe."""
-        self.cap[edge_id] = cap
+        self.cap = _store(self.cap, edge_id, cap)
         self.cap[edge_id ^ 1] = 0
 
     def reset_flow(self) -> None:
         cap = self.cap
-        for i in range(0, len(cap), 2):
-            total = cap[i] + cap[i + 1]
-            cap[i] = total
-            cap[i + 1] = 0
+        cap[0::2] += cap[1::2]
+        cap[1::2] = 0
 
     # -- flow-preserving capacity updates (the warm-start primitives) --- #
 
@@ -139,11 +359,11 @@ class FlowNetwork:
         """Raise edge `edge_id`'s capacity to `new_cap` without touching the
         flow currently on it: the flow stays feasible and a later `maxflow`
         call only augments the delta."""
-        flow = self.cap[edge_id ^ 1]
+        flow = int(self.cap[edge_id ^ 1])
         if new_cap < flow:
             raise ValueError(f"increase_edge_cap to {new_cap} below current "
                              f"flow {flow} on edge {edge_id}")
-        self.cap[edge_id] = new_cap - flow
+        self.cap = _store(self.cap, edge_id, new_cap - flow)
 
     def decrease_edge_cap(self, edge_id: int, new_cap: int,
                           s: int, t: int) -> int:
@@ -157,13 +377,13 @@ class FlowNetwork:
         (u⇝s and t⇝v residual pushes, which always exist by flow
         decomposition).  Returns the s->t flow value lost, so a caller
         tracking the current flow value can subtract it."""
-        flow = self.cap[edge_id ^ 1]
+        flow = int(self.cap[edge_id ^ 1])
         if flow <= new_cap:
-            self.cap[edge_id] = new_cap - flow
+            self.cap = _store(self.cap, edge_id, new_cap - flow)
             return 0
         excess = flow - new_cap
         self.cap[edge_id] = 0
-        self.cap[edge_id ^ 1] = new_cap
+        self.cap = _store(self.cap, edge_id ^ 1, new_cap)
         u, v = self.to[edge_id ^ 1], self.to[edge_id]
         short = excess - self.maxflow(u, v, limit=excess)
         if short:
@@ -181,12 +401,30 @@ class FlowNetwork:
 
     # ------------------------------------------------------------------ #
     def maxflow(self, s: int, t: int, limit: Optional[int] = None) -> int:
-        """Max flow s->t, early-exiting once `limit` is reached."""
+        """Max flow s->t, early-exiting once `limit` is reached (the
+        returned value is exactly ``min(F, limit)`` on both substrates)."""
         if s == t:
             raise ValueError("source == sink")
         COUNTERS.probes += 1
+        if (HAVE_SCIPY and len(self.to) >= FAST_MIN_ENTRIES
+                and self.cap.dtype != object):
+            fast = self._fast
+            if fast is None or fast.m != len(self.to) or fast.n != self.n:
+                fast = self._fast = _CsrSolver(self)
+            value = fast.solve(self, s, t, limit)
+            if value is not None:
+                return value
+        return self._maxflow_py(s, t, limit)
+
+    def _maxflow_py(self, s: int, t: int, limit: Optional[int]) -> int:
+        """The pure-Python Dinic substrate (reference-shaped; also the
+        arbitrary-precision and small-network path).  Runs on a plain-list
+        copy of the capacities — interpreter loops over lists beat numpy
+        scalar indexing — and writes the residual state back."""
+        self._ensure_adj()
         flow = 0
-        cap, to, nxt, head = self.cap, self.to, self.nxt, self.head
+        cap = self.cap.tolist()
+        to, nxt, head = self.to, self.nxt, self.head
         while limit is None or flow < limit:
             # BFS level graph, pruned at the sink's level (nodes further
             # out can never lie on a shortest augmenting path)
@@ -251,11 +489,17 @@ class FlowNetwork:
                     cap[i ^ 1] += aug
                 flow += aug
                 if limit is not None and flow >= limit:
-                    return flow
+                    break
+            if limit is not None and flow >= limit:
+                break
+        self.cap[:] = cap
         return flow
 
     def min_cut_side(self, s: int) -> List[int]:
-        """After maxflow, the source side of a min cut (residual-reachable)."""
+        """After maxflow, the source side of a min cut (residual-reachable).
+        For a *maximum* flow this set is canonical (the unique minimal
+        source side), independent of which substrate found the flow."""
+        self._ensure_adj()
         seen = [False] * self.n
         seen[s] = True
         stack = [s]
@@ -271,8 +515,8 @@ class FlowNetwork:
         return [u for u in range(self.n) if seen[u]]
 
 
-def warm_restore(net: FlowNetwork, cur_tgt: List[int],
-                 state: Tuple[List[int], int, List[int]],
+def warm_restore(net: FlowNetwork, cur_tgt: np.ndarray,
+                 state: Tuple[np.ndarray, int, np.ndarray],
                  src: int, snk: int, limit: int) -> int:
     """Restore a flow snapshot taken for (src, snk), apply the capacity
     deltas accumulated since (flow-preserving increase/decrease against the
@@ -288,17 +532,18 @@ def warm_restore(net: FlowNetwork, cur_tgt: List[int],
     store, and the §2.3 gadget warm probes."""
     caps, value, tgt = state
     cap = net.cap
+    m0 = len(tgt)
     cap[:len(caps)] = caps
     # edges added since the snapshot carried no flow: install fresh
-    for j in range(len(tgt), len(cur_tgt)):
-        cap[2 * j] = cur_tgt[j]
-        cap[2 * j + 1] = 0
+    if len(cur_tgt) > m0:
+        cap[2 * m0::2] = cur_tgt[m0:]
+        cap[2 * m0 + 1::2] = 0
     decreases: List[Tuple[int, int]] = []
-    for j, old in enumerate(tgt):
-        new = cur_tgt[j]
-        if new > old:        # increases first: more reroute room
+    for j in np.flatnonzero(cur_tgt[:m0] != tgt).tolist():
+        new = int(cur_tgt[j])
+        if new > tgt[j]:     # increases first: more reroute room
             net.increase_edge_cap(2 * j, new)
-        elif new < old:
+        else:
             decreases.append((2 * j, new))
     for eid, new in decreases:
         value -= net.decrease_edge_cap(eid, new, src, snk)
@@ -352,11 +597,10 @@ class SourcedNetwork:
             self.src_eid[u] = self.net.add_edge(self.s, u, m)
         for (a, b, c) in extra:
             self.net.add_edge(a, b, c)
-        cap = self.net.cap
-        self._tgt: List[int] = [cap[i] for i in range(0, len(cap), 2)]
+        self._tgt: np.ndarray = self.net.cap[0::2].copy()
         self._order: Optional[List[int]] = None    # adaptive sink order
         # sink -> (cap snapshot, flow value, target snapshot)
-        self._warm: Dict[int, Tuple[List[int], int, List[int]]] = {}
+        self._warm: Dict[int, Tuple[np.ndarray, int, np.ndarray]] = {}
         self.last_failing: Optional[int] = None    # sink of last failed sweep
 
     def clone(self, g: Optional[DiGraph] = None) -> "SourcedNetwork":
@@ -372,7 +616,7 @@ class SourcedNetwork:
         dup.s = self.s
         dup.eid = dict(self.eid)
         dup.src_eid = dict(self.src_eid)
-        dup._tgt = list(self._tgt)
+        dup._tgt = self._tgt.copy()
         dup._order = None if self._order is None else list(self._order)
         # snapshot tuples are never mutated in place (warm probes replace
         # entries wholesale), so sharing them with the source is safe
@@ -386,7 +630,7 @@ class SourcedNetwork:
         e = (u, v)
         if e not in self.eid:
             self.eid[e] = self.net.add_edge(u, v, 0)
-            self._tgt.append(0)
+            self._tgt = np.append(self._tgt, 0)
         return self.eid[e]
 
     def add_probe_edge(self, u: int, v: int) -> int:
@@ -394,7 +638,7 @@ class SourcedNetwork:
         to (never merged with) any graph edge (u, v), toggled per probe
         with `set_cap_id`."""
         eid = self.net.add_edge(u, v, 0)
-        self._tgt.append(0)
+        self._tgt = np.append(self._tgt, 0)
         return eid
 
     # -- capacity rewrites between probes ------------------------------- #
@@ -404,7 +648,7 @@ class SourcedNetwork:
         record coherent (all capacity writes must go through here or
         `set_cap`, or warm starts would diff against a stale target)."""
         self.net.set_edge_cap(edge_id, cap)
-        self._tgt[edge_id >> 1] = cap
+        self._tgt = _store(self._tgt, edge_id >> 1, cap)
 
     def set_cap(self, u: int, v: int, cap: int) -> None:
         self.set_cap_id(self.ensure_edge(u, v), cap)
@@ -412,7 +656,7 @@ class SourcedNetwork:
     def increase_cap_id(self, edge_id: int, cap: int) -> None:
         """Flow-preserving capacity increase by id (target kept coherent)."""
         self.net.increase_edge_cap(edge_id, cap)
-        self._tgt[edge_id >> 1] = cap
+        self._tgt = _store(self._tgt, edge_id >> 1, cap)
 
     def decrease_cap_id(self, edge_id: int, cap: int,
                         source: int, sink: int) -> int:
@@ -420,7 +664,7 @@ class SourcedNetwork:
         residual paths of the current source->sink flow; returns the flow
         value lost."""
         lost = self.net.decrease_edge_cap(edge_id, cap, source, sink)
-        self._tgt[edge_id >> 1] = cap
+        self._tgt = _store(self._tgt, edge_id >> 1, cap)
         return lost
 
     def rescale_graph_caps(self, scale: int) -> None:
@@ -481,7 +725,7 @@ class SourcedNetwork:
         self.last_failing = None
         return True
 
-    def _warm_value(self, state: Tuple[List[int], int, List[int]],
+    def _warm_value(self, state: Tuple[np.ndarray, int, np.ndarray],
                     src: int, snk: int, limit: int) -> int:
         return warm_restore(self.net, self._tgt, state, src, snk, limit)
 
@@ -494,7 +738,7 @@ class SourcedNetwork:
             value = net.maxflow(s, v, limit=threshold)
         else:
             value = self._warm_value(state, s, v, threshold)
-        self._warm[v] = (list(net.cap), value, list(self._tgt))
+        self._warm[v] = (net.cap.copy(), value, self._tgt.copy())
         return value
 
     def warm_flow(self, store: Dict, key, src: int, snk: int, limit: int,
@@ -511,7 +755,7 @@ class SourcedNetwork:
             value = self.net.maxflow(src, snk, limit=limit)
         else:
             value = self._warm_value(state, src, snk, limit)
-        store[key] = (list(self.net.cap), value, list(self._tgt))
+        store[key] = (self.net.cap.copy(), value, self._tgt.copy())
         while len(store) > maxsize:
             store.pop(next(iter(store)))
         return value

@@ -397,14 +397,26 @@ def lower(sched: PipelineSchedule):
 FamilyArtifact = Union[PipelineSchedule, AllReduceSchedule]
 
 
+def _split_pack_worker(plan: CollectivePlan) -> CollectivePlan:
+    """Process-pool body for `compile_family(jobs=...)`: finish one plan
+    kind's chunk-count-independent stages.  Ships a solved (or fresh,
+    for rooted kinds) plan to a worker process and returns the packed
+    plan — stage stats (wall times + oracle counters) ride back inside
+    it, so BENCH instrumentation survives the process hop; only the
+    in-process warm-oracle offers are lost (documented trade-off)."""
+    if plan.opt is None:
+        plan = solve(plan)
+    return pack(split(plan))
+
+
 def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
                    num_chunks: int = 8, root: Optional[int] = None,
                    fixed_k: Optional[int] = None,
                    pair_priority: Optional[PairPriority] = None,
                    verify: bool = False,
                    timings: Optional[Dict[str, float]] = None,
-                   packed_out: Optional[Dict[str, CollectivePlan]] = None
-                   ) -> Dict[str, FamilyArtifact]:
+                   packed_out: Optional[Dict[str, CollectivePlan]] = None,
+                   jobs: int = 1) -> Dict[str, FamilyArtifact]:
     """Compile several collectives for one topology, sharing stages.
 
     * The §2.1 solve runs once and is shared across both orientations
@@ -424,6 +436,12 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
       rule) can re-run only `rounds` + `emit` on a
       ``dataclasses.replace(plan, num_chunks=...)`` copy instead of
       recompiling the family.
+    * ``jobs > 1`` runs the per-orientation split+pack stages in worker
+      *processes* (each packed orientation/kind is independent once the
+      solve is shared).  Artifacts stay byte-identical to the sequential
+      path — only wall times in the stats sidecar differ, the family's
+      parallel stage wall is charged to the first requested kind, and the
+      in-process warm-oracle store sees no offers from worker plans.
 
     Returns {kind: artifact}, semantically identical (and byte-identical
     once serialized) to calling the per-kind `compile_*` entry points.
@@ -435,6 +453,42 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
                         f"(choose from {FAMILY_KINDS})")
     packed: Dict[str, CollectivePlan] = {}
     full: Dict[str, CollectivePlan] = {}
+
+    pre_wall = 0.0
+    if jobs > 1:
+        # expand to plan kinds in sequential trigger order (allreduce is
+        # RS then AG — the same order the emit loop below uses)
+        plan_kinds: List[str] = []
+        for kind in kinds:
+            for pk in (("reduce_scatter", "allgather")
+                       if kind == "allreduce" else (kind,)):
+                if pk not in plan_kinds:
+                    plan_kinds.append(pk)
+        if len(plan_kinds) > 1:
+            t0 = time.perf_counter()
+            todo: List[CollectivePlan] = []
+            shared_opt: Optional[Optimality] = None
+            for pk in plan_kinds:
+                p = plan_for(pk, topo, num_chunks=num_chunks,
+                             root=root if pk in _ROOTED else None,
+                             fixed_k=fixed_k if pk not in _ROOTED else None,
+                             pair_priority=pair_priority, verify=verify)
+                if pk not in _ROOTED and fixed_k is None:
+                    # exactly the sequential sharing: the first non-rooted
+                    # kind solves, its transpose dual adopts that solution
+                    if shared_opt is None:
+                        p = solve(p)
+                        shared_opt = p.opt
+                    else:
+                        p = adopt_solution(p, shared_opt)
+                # rooted / fixed-k plans solve in their worker
+                todo.append(p)
+            import concurrent.futures
+            with concurrent.futures.ProcessPoolExecutor(
+                    max_workers=min(jobs, len(todo))) as ex:
+                done = list(ex.map(_split_pack_worker, todo))
+            packed.update({p.kind: p for p in done})
+            pre_wall = time.perf_counter() - t0
 
     def packed_plan(kind: str) -> CollectivePlan:
         if kind in packed:
@@ -470,6 +524,8 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
             out[kind] = emit(full_plan(kind))
         if timings is not None:
             timings[kind] = time.perf_counter() - t0
+    if timings is not None and kinds:
+        timings[kinds[0]] += pre_wall   # parallel stage wall (jobs > 1)
     if packed_out is not None:
         packed_out.update(packed)
     return out

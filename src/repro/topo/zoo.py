@@ -355,6 +355,10 @@ ZOO_SPECS: Dict[str, str] = {
     "torus8x8_failed": "torus2d:8x8@fail(0-1)",
     "fattree8p4l2h": "fattree:8p4l2h",
     "fattree8p4l2h_degraded": "fattree:8p4l2h,host_cap=2@degrade(0-64,cap=1)",
+    "fattree8p4l4h": "fattree:8p4l4h",
     "dragonfly6x4": "dragonfly:g6,p4",
     "dragonfly6x4_degraded": "dragonfly:g6,p4@degrade(0-24,cap=2)",
+    # 256-node fabric: the largest committed row — the compact-CSR maxflow
+    # substrate is what makes sweeping this tractable
+    "torus16x16": "torus2d:16x16",
 }

@@ -10,7 +10,7 @@ import pytest
 from repro.cache import (COLLECTIVES, ScheduleCache, SMOKE_NAMES,
                          allreduce_from_json, allreduce_to_json,
                          compiler_fingerprint, run_sweep, schedule_from_json,
-                         schedule_to_json, sweep_registry)
+                         schedule_to_json, sweep_one, sweep_registry)
 from repro.cache.serialize import ensure_claimed
 from repro.core import (compile_allgather, compile_allreduce,
                         compile_broadcast, compile_reduce,
@@ -321,6 +321,50 @@ def test_checked_in_bench_is_current():
         assert Fraction(e["achieved_over_claimed"]) == 1
         assert e["num_chunks"] >= e["depth"]
         assert e["oracle_probes"] >= 0 and e["oracle_augments"] >= 0
+
+
+def test_sweep_compile_stats_v6_shape():
+    """BENCH v6: ``compile_stats`` is a list of per-stage rows in pipeline
+    order, each carrying wall seconds plus the oracle counters, and the
+    stage seconds account for (nearly all of) the row's compile time."""
+    for kind in ("allgather", "allreduce"):
+        e = sweep_one("fig1a", kind=kind, num_chunks=4)
+        cs = e["compile_stats"]
+        assert isinstance(cs, list)
+        stages = [row["stage"] for row in cs]
+        assert stages[:3] == ["solve", "split", "pack"]  # pipeline order
+        assert len(stages) == len(set(stages))
+        for row in cs:
+            assert set(row) == {"stage", "seconds", "probes", "augments"}
+            assert row["seconds"] >= 0
+            assert row["probes"] >= 0 and row["augments"] >= 0
+        total = sum(row["seconds"] for row in cs)
+        # stage walls are nested inside the compile wall: never (modulo
+        # the 1e-6 rounding) larger, and covering almost all of it
+        assert total <= e["compile_time_s"] + 1e-3
+        assert e["compile_time_s"] - total <= \
+            0.25 * e["compile_time_s"] + 0.05
+        # the top-level counter sums are the compile_stats column sums
+        assert e["oracle_probes"] == sum(r["probes"] for r in cs)
+        assert e["oracle_augments"] == sum(r["augments"] for r in cs)
+
+
+def test_compile_family_parallel_pack_byte_identical():
+    """compile_family(jobs=2) runs split+pack in worker processes; the
+    emitted artifacts must serialize byte-identically to the sequential
+    compile (stats sidecars may differ, schedule bytes may not)."""
+    from repro.core.plan import compile_family
+    g = fig1a()
+    kinds = ("allgather", "reduce_scatter", "allreduce")
+    seq = compile_family(g, kinds=kinds, num_chunks=4)
+    par = compile_family(g, kinds=kinds, num_chunks=4, jobs=2)
+    assert set(seq) == set(par)
+    for kind in seq:
+        a, b = seq[kind], par[kind]
+        if kind == "allreduce":
+            assert allreduce_to_json(a) == allreduce_to_json(b)
+        else:
+            assert schedule_to_json(a) == schedule_to_json(b)
 
 
 def test_cache_lru_eviction(tmp_path):

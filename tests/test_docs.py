@@ -41,3 +41,31 @@ def test_check_docs_catches_drift(tmp_path, monkeypatch):
     assert any("broken link" in e for e in check_docs.check_links())
     flag_errors = check_docs.check_flags()
     assert any("--no-such-flag" in e for e in flag_errors)
+
+
+def test_check_docs_catches_stale_bench_table(tmp_path, monkeypatch):
+    """Doc-embedded BENCH perf tables must match a fresh render from the
+    committed scoreboard; --fix rewrites them in place."""
+    import json
+    tools_dir = str(REPO / "tools")
+    sys.path.insert(0, tools_dir)
+    try:
+        import check_docs
+    finally:
+        sys.path.remove(tools_dir)
+    bench = json.loads((REPO / "BENCH_schedules.json").read_text())
+    (tmp_path / "BENCH_schedules.json").write_text(json.dumps(bench))
+    readme = tmp_path / "README.md"
+    readme.write_text("perf:\n\n<!-- BENCH_TABLE:compile -->\n"
+                      "| stale | numbers |\n<!-- /BENCH_TABLE -->\n")
+    (tmp_path / "src/repro/cache").mkdir(parents=True)
+    (tmp_path / "src/repro/cache/README.md").write_text("no tables here\n")
+    monkeypatch.setattr(check_docs, "REPO", tmp_path)
+    errors = check_docs.check_bench_numbers()
+    assert any("BENCH_TABLE:compile is stale" in e for e in errors)
+    # --fix rewrites the block from the scoreboard, after which it's clean
+    assert check_docs.check_bench_numbers(fix=True) == []
+    assert check_docs.check_bench_numbers() == []
+    assert "| stale |" not in readme.read_text()
+    expected = check_docs.render_bench_table("compile", bench)
+    assert expected in readme.read_text()

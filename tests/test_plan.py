@@ -309,21 +309,26 @@ def test_sweep_rows_carry_stage_timings(tmp_path):
     doc = run_sweep(names=("ring8",), jobs=1,
                     collectives=("allgather", "allreduce"),
                     out_path=str(tmp_path / "bench.json"))
-    assert doc["version"] == 5
+    assert doc["version"] == 6
     assert doc["fixed_k"] is None
     by_kind = {e["kind"]: e for e in doc["entries"]}
     for e in doc["entries"]:
         assert e["fixed_k"] is None
         stats = e["compile_stats"]
-        assert set(stats) == {"solve", "split", "pack", "rounds"}
-        assert all(v >= 0 for v in stats.values())
-        # oracle-engine work counters ride on every row
-        assert e["oracle_probes"] >= 0 and e["oracle_augments"] >= 0
+        # v6: per-stage list rows in pipeline order, seconds + counters
+        assert {r["stage"] for r in stats} == {"solve", "split", "pack",
+                                               "rounds"}
+        assert all(r["seconds"] >= 0 and r["probes"] >= 0
+                   and r["augments"] >= 0 for r in stats)
+        # oracle-engine work counters ride on every row (= column sums)
+        assert e["oracle_probes"] == sum(r["probes"] for r in stats)
+        assert e["oracle_augments"] == sum(r["augments"] for r in stats)
         assert isinstance(e["oracle_probes"], int)
     # compile_time_s is the kind's *marginal* family time: the first kind
     # pays its own stages in full...
     ag = by_kind["allgather"]
-    assert sum(ag["compile_stats"].values()) <= ag["compile_time_s"] + 1e-3
+    assert (sum(r["seconds"] for r in ag["compile_stats"])
+            <= ag["compile_time_s"] + 1e-3)
     # ...while allreduce reuses the packed products of its siblings — its
     # marginal time is (near-)free even though its stats report the shared
     # stages that produced the artifact
@@ -331,7 +336,7 @@ def test_sweep_rows_carry_stage_timings(tmp_path):
     assert ar["compile_time_s"] < ag["compile_time_s"] + 0.1
     assert ar["oracle_probes"] >= ag["oracle_probes"]  # stats of both halves
     on_disk = json.loads((tmp_path / "bench.json").read_text())
-    assert on_disk["entries"][0]["compile_stats"]["solve"] >= 0
+    assert on_disk["entries"][0]["compile_stats"][0]["stage"] == "solve"
 
 
 def test_sweep_fixed_k_rows(tmp_path):

@@ -1,0 +1,318 @@
+"""Differential harness: the optimized oracle engine vs the reference
+re-implementations in `repro.core.reference` (straight from the paper's
+pseudocode — see that module's docstring for the theorem mapping).
+
+Three layers, each exact (no tolerances):
+
+* oracle values — `FlowNetwork.maxflow` (both substrates) vs
+  `reference_maxflow`; `_TheoremEightProber.split_cap` vs
+  `reference_split_cap`; `_MuGadget.mu` vs `reference_mu`;
+* packing output — `pack_rooted_trees` vs `reference_pack_rooted_trees`
+  class-by-class (roots, multiplicities, vertex and edge orders);
+* artifacts — compiled schedules byte-identical across maxflow substrates
+  (scipy CSR forced vs pure Python forced).
+
+Tier-1 runs the seeded-random cases and a small zoo subset; the `slow`
+marker (deselected by default, run by the nightly CI job) extends the
+differential sweep over the full topology zoo.
+
+Counter-regression pins ride along here: the split/pack stage meta
+``probes`` / ``augments`` on the fig1a and dgx8 fixtures must stay under
+pinned ceilings, so an accidental warm-start or caching regression fails
+tier-1 instead of only showing up in BENCH wall times.
+"""
+import random
+
+import pytest
+
+from repro.core import maxflow as maxflow_mod
+from repro.core import plan as plan_mod
+from repro.core import reference as ref
+from repro.core.arborescence import _MuGadget, pack_rooted_trees
+from repro.core.edge_split import _TheoremEightProber
+from repro.core.maxflow import FlowNetwork
+from repro.topo.spec import TopologySpec
+from repro.topo.zoo import ZOO_SPECS
+
+# zoo rows the tier-1 (fast) differential subset covers; the slow sweep
+# parametrizes over every zoo row instead
+FAST_ZOO = ("fig1a", "dgx8", "ring8", "hypercube3")
+# full-reference packing is Edmonds-Karp-per-candidate — tractable only on
+# rows up to this many compute nodes (larger rows get sampled-µ coverage)
+PACK_REF_MAX_COMPUTE = 16
+# the substrate byte-identity sweep compiles every family twice, once on
+# the *pure-Python* maxflow substrate — tractable up to 64 compute nodes;
+# the bigger rows (fattree8p4l4h, torus16x16) are exactly the ones the
+# Python substrate can't chew through, which is why they get sampled
+# per-oracle differentials instead
+BYTES_MAX_COMPUTE = 64
+# sampled probes per topology for the large-row µ / split_cap differentials
+SAMPLES = 12
+
+
+def zoo_graph(name):
+    return TopologySpec.parse(ZOO_SPECS[name]).build()
+
+
+def packed_stage_input(g, kind="allgather"):
+    """(split graph, k) exactly as the §2.3 pack stage receives them."""
+    p = plan_mod.plan_for(kind, g, num_chunks=4, root=None)
+    p = plan_mod.split(plan_mod.solve(p))
+    return p.split.graph, p.opt.k
+
+
+def class_signature(classes):
+    return [(c.root, c.mult, tuple(c.verts), tuple(c.edges))
+            for c in classes]
+
+
+def random_flow_case(rng):
+    n = rng.randint(4, 12)
+    edges = []
+    for _ in range(rng.randint(n, 4 * n)):
+        u, v = rng.sample(range(n), 2)
+        edges.append((u, v, rng.randint(1, 20)))
+    s, t = rng.sample(range(n), 2)
+    limit = rng.choice([None, rng.randint(1, 30)])
+    return n, edges, s, t, limit
+
+
+# ---------------------------------------------------------------------- #
+# maxflow primitive
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("substrate", ["scipy", "python"])
+def test_maxflow_matches_reference_seeded(substrate, monkeypatch):
+    monkeypatch.setattr(maxflow_mod, "FAST_MIN_ENTRIES",
+                        0 if substrate == "scipy" else 1 << 30)
+    rng = random.Random(1234)
+    for _ in range(40):
+        n, edges, s, t, limit = random_flow_case(rng)
+        net = FlowNetwork(n)
+        for u, v, c in edges:
+            net.add_edge(u, v, c)
+        assert (net.maxflow(s, t, limit=limit)
+                == ref.reference_maxflow(edges, s, t, limit=limit))
+
+
+def test_maxflow_residual_reusable_after_reset(monkeypatch):
+    """After reset_flow, a second probe on the same network must equal a
+    cold reference solve — on both substrates."""
+    rng = random.Random(99)
+    for thresh in (0, 1 << 30):
+        monkeypatch.setattr(maxflow_mod, "FAST_MIN_ENTRIES", thresh)
+        for _ in range(10):
+            n, edges, s, t, limit = random_flow_case(rng)
+            net = FlowNetwork(n)
+            for u, v, c in edges:
+                net.add_edge(u, v, c)
+            net.maxflow(s, t, limit=limit)
+            net.reset_flow()
+            assert (net.maxflow(t, s)
+                    == ref.reference_maxflow(edges, t, s))
+
+
+def test_min_flow_from_source_matches_reference():
+    """The production Theorem-1/7 oracle is a thresholded bool; compare it
+    against the exact reference minimum at thresholds bracketing it."""
+    for name in FAST_ZOO:
+        g = zoo_graph(name)
+        p = plan_mod.solve(plan_mod.plan_for("allgather", g, num_chunks=4,
+                                             root=None))
+        d = p.scaled
+        k = p.opt.k
+        exact = ref.reference_min_flow_from_source(d, k)
+        for threshold in (exact - 1, exact, exact + 1):
+            if threshold < 0:
+                continue
+            assert (maxflow_mod.min_flow_from_source(d, k, 1, threshold)
+                    == (exact >= threshold)), (name, threshold)
+        assert ref.reference_feasible(d, k)
+
+
+# ---------------------------------------------------------------------- #
+# Theorem 8 (split) and Theorem 12 (pack step size) oracles
+# ---------------------------------------------------------------------- #
+
+def split_cap_triples(g, limit=SAMPLES):
+    """Deterministic sample of (u, w, t) Theorem-8 probe triples."""
+    out = []
+    for w in sorted(g.switches):
+        ins = sorted(u for (u, x) in g.cap if x == w and g.cap[(u, w)] > 0)
+        outs = sorted(t for (x, t) in g.cap if x == w and g.cap[(w, t)] > 0)
+        for u in ins[:3]:
+            for t in outs[:3]:
+                if u != t:
+                    out.append((u, w, t))
+    rng = random.Random(7)
+    rng.shuffle(out)
+    return out[:limit]
+
+
+def assert_split_cap_matches(name):
+    g = zoo_graph(name)
+    p = plan_mod.solve(plan_mod.plan_for("allgather", g, num_chunks=4,
+                                         root=None))
+    sg, k = p.scaled, p.opt.k
+    triples = split_cap_triples(sg)
+    if not triples:
+        pytest.skip(f"{name} is direct-connect (no switch triples)")
+    prober = _TheoremEightProber(sg, k)
+    for (u, w, t) in triples:
+        assert (prober.split_cap(u, w, t)
+                == ref.reference_split_cap(sg, k, u, w, t)), (name, u, w, t)
+
+
+def mu_candidates(dstar, k, limit=SAMPLES):
+    """(classes, ci, x, y) probe states sampled from real pack growths: run
+    the packer and replay µ probes at the *initial* state of each class
+    growth (where every candidate is still open)."""
+    from repro.core.arborescence import TreeClass
+    nodes = sorted(dstar.compute)
+    g = dict(dstar.cap)
+    classes = [TreeClass(root=u, mult=k, verts=[u], edges=[])
+               for u in nodes]
+    out = []
+    for ci in range(min(len(classes), 4)):
+        x = classes[ci].root
+        for y in nodes:
+            if y != x and g.get((x, y), 0) > 0:
+                out.append((classes, ci, x, y))
+    rng = random.Random(11)
+    rng.shuffle(out)
+    return out[:limit]
+
+
+def assert_mu_matches(name):
+    g = zoo_graph(name)
+    dstar, k = packed_stage_input(g)
+    cases = mu_candidates(dstar, k)
+    gd = dict(dstar.cap)
+    for (classes, ci, x, y) in cases:
+        gadget = _MuGadget(dstar, gd, classes, ci)
+        assert (gadget.mu(x, y)
+                == ref.reference_mu(dstar, gd, classes, ci, x, y)), \
+            (name, ci, x, y)
+
+
+def assert_pack_matches(name):
+    g = zoo_graph(name)
+    dstar, k = packed_stage_input(g)
+    demands = {u: k for u in sorted(dstar.compute)}
+    assert (class_signature(pack_rooted_trees(dstar, demands))
+            == class_signature(ref.reference_pack_rooted_trees(
+                dstar, demands))), name
+
+
+def assert_schedule_bytes_substrate_invariant(name, monkeypatch):
+    from repro.cache.serialize import schedule_to_json
+    g = zoo_graph(name)
+
+    def compile_pair():
+        out = plan_mod.compile_family(g, kinds=("allgather",
+                                                "reduce_scatter"),
+                                      num_chunks=4)
+        return {k: schedule_to_json(a) for k, a in out.items()}
+
+    monkeypatch.setattr(maxflow_mod, "FAST_MIN_ENTRIES", 0)
+    fast = compile_pair()
+    monkeypatch.setattr(maxflow_mod, "FAST_MIN_ENTRIES", 1 << 30)
+    slow = compile_pair()
+    assert fast == slow, name
+
+
+@pytest.mark.parametrize("name", FAST_ZOO)
+def test_split_cap_matches_reference(name):
+    assert_split_cap_matches(name)
+
+
+@pytest.mark.parametrize("name", FAST_ZOO)
+def test_mu_matches_reference(name):
+    assert_mu_matches(name)
+
+
+@pytest.mark.parametrize("name", FAST_ZOO)
+def test_pack_matches_reference(name):
+    assert_pack_matches(name)
+
+
+@pytest.mark.parametrize("name", FAST_ZOO)
+def test_schedule_bytes_substrate_invariant(name, monkeypatch):
+    assert_schedule_bytes_substrate_invariant(name, monkeypatch)
+
+
+def test_pack_matches_reference_seeded_random():
+    from test_arborescence import cycle_sum_graph
+    for seed in range(4):
+        g = cycle_sum_graph(5 + seed, 2, seed)
+        dstar, k = packed_stage_input(g)
+        demands = {u: k for u in sorted(dstar.compute)}
+        assert (class_signature(pack_rooted_trees(dstar, demands))
+                == class_signature(ref.reference_pack_rooted_trees(
+                    dstar, demands)))
+
+
+# ---------------------------------------------------------------------- #
+# nightly: the full zoo
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(ZOO_SPECS))
+def test_zoo_oracles_match_reference_slow(name):
+    g = zoo_graph(name)
+    dstar, k = packed_stage_input(g)
+    if dstar.num_compute <= PACK_REF_MAX_COMPUTE:
+        assert_pack_matches(name)
+    else:
+        assert_mu_matches(name)
+    if g.switches:
+        assert_split_cap_matches(name)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(ZOO_SPECS))
+def test_zoo_schedule_bytes_substrate_invariant_slow(name, monkeypatch):
+    g = zoo_graph(name)
+    if g.num_compute > BYTES_MAX_COMPUTE:
+        pytest.skip(f"{name}: {g.num_compute} compute nodes — pure-Python "
+                    f"substrate compile is intractable; covered by the "
+                    f"sampled oracle differentials instead")
+    assert_schedule_bytes_substrate_invariant(name, monkeypatch)
+
+
+# ---------------------------------------------------------------------- #
+# counter-regression pins (fig1a / dgx8): ceilings ~1.4x current values
+# ---------------------------------------------------------------------- #
+
+COUNTER_CEILINGS = {
+    # (fixture, kind, stage): (max probes, max augments)
+    ("fig1a", "allgather", "split"): (480, 950),
+    ("fig1a", "allgather", "pack"): (60, 220),
+    ("fig1a", "reduce_scatter", "split"): (480, 950),
+    ("fig1a", "reduce_scatter", "pack"): (60, 220),
+    ("dgx8", "allgather", "split"): (240, 1400),
+    ("dgx8", "allgather", "pack"): (160, 1020),
+    ("dgx8", "reduce_scatter", "split"): (240, 1400),
+    ("dgx8", "reduce_scatter", "pack"): (160, 1020),
+}
+
+
+@pytest.mark.parametrize("fixture", ("fig1a", "dgx8"))
+def test_oracle_counter_ceilings(fixture):
+    g = zoo_graph(fixture)
+    for kind in ("allgather", "reduce_scatter"):
+        p = plan_mod.plan_for(kind, g, num_chunks=4, root=None)
+        p = plan_mod.pack(plan_mod.split(plan_mod.solve(p)))
+        by_stage = {s.stage: s.meta for s in p.stats.stages}
+        for stage in ("split", "pack"):
+            probes = by_stage[stage].get("probes")
+            augments = by_stage[stage].get("augments")
+            assert probes is not None and augments is not None, \
+                f"{fixture}.{kind}.{stage} lost its oracle counters"
+            max_p, max_a = COUNTER_CEILINGS[(fixture, kind, stage)]
+            assert probes <= max_p, \
+                (f"{fixture}.{kind}.{stage} oracle_probes regressed: "
+                 f"{probes} > ceiling {max_p}")
+            assert augments <= max_a, \
+                (f"{fixture}.{kind}.{stage} oracle_augments regressed: "
+                 f"{augments} > ceiling {max_a}")

@@ -49,9 +49,11 @@ LEGACY_REGISTRY = {
     "fattree8p4l2h": lambda: fat_tree(8, 4, 2),
     "fattree8p4l2h_degraded": lambda: degrade_link(
         fat_tree(8, 4, 2, host_cap=2), 0, 64, 1),
+    "fattree8p4l4h": lambda: fat_tree(8, 4, 4),
     "dragonfly6x4": lambda: dragonfly(6, 4, 4, 1),
     "dragonfly6x4_degraded": lambda: degrade_link(
         dragonfly(6, 4, 4, 1), 0, 24, 2),
+    "torus16x16": lambda: torus_2d(16, 16),
 }
 
 

@@ -28,6 +28,13 @@ Four independent checks over the documentation suite:
    callers) is exempt.  Complements the tier-1 runtime gate
    (`ReproDeprecationWarning` promoted to error in pyproject.toml).
 
+5. **BENCH perf numbers** — every `<!-- BENCH_TABLE:<kind> -->` ...
+   `<!-- /BENCH_TABLE -->` block in README.md / the cache README must
+   byte-match a fresh render from the committed `BENCH_schedules.json`,
+   so perf numbers quoted in docs always come from the regenerated
+   scoreboard (stale copies fail CI).  ``--fix`` rewrites the blocks in
+   place after a BENCH regeneration.
+
 Exit code 0 = clean; non-zero prints every violation.
 """
 from __future__ import annotations
@@ -171,14 +178,101 @@ def check_deprecated_imports() -> list:
     return errors
 
 
-def main() -> int:
+BENCH_TABLE_RE = re.compile(
+    r"<!-- BENCH_TABLE:([\w-]+) -->\n(.*?)<!-- /BENCH_TABLE -->", re.S)
+BENCH_TABLE_DOCS = ["README.md", "src/repro/cache/README.md"]
+
+
+def _pack_seconds(entry) -> float:
+    """AG/RS §2.3 pack wall seconds of one BENCH row (v6 list or pre-v6
+    mapping)."""
+    cs = entry.get("compile_stats")
+    if isinstance(cs, dict):
+        return cs.get("pack", 0.0)
+    if cs:
+        return sum(r["seconds"] for r in cs if r["stage"] == "pack")
+    return 0.0
+
+
+def render_bench_table(kind: str, doc: dict) -> str:
+    """The canonical text of one doc-embedded BENCH table.  Numbers are
+    taken straight from the committed scoreboard — regenerating BENCH and
+    running ``check_docs.py --fix`` is the only way docs perf numbers
+    change."""
+    if kind != "compile":
+        raise ValueError(f"unknown BENCH_TABLE kind {kind!r}")
+    from repro.cache import LARGE_NAMES
+    by_name = {}
+    for e in doc["entries"]:
+        by_name.setdefault(e["name"], []).append(e)
+    lines = [
+        "| topology | compute | family compile (s) | §2.3 pack (s, AG+RS) |",
+        "|---|---|---|---|",
+    ]
+    for name in LARGE_NAMES:
+        rows = by_name.get(name)
+        if not rows:
+            continue
+        family = sum(r["compile_time_s"] for r in rows)
+        pack = sum(_pack_seconds(r) for r in rows
+                   if r["kind"] in ("allgather", "reduce_scatter"))
+        lines.append(f"| `{name}` | {rows[0]['num_compute']} "
+                     f"| {family:.2f} | {pack:.2f} |")
+    total = sum(e["compile_time_s"] for e in doc["entries"])
+    lines.append(f"| **whole zoo** ({doc['num_topologies']} topologies × "
+                 f"{len(doc['collectives'])} collectives) | | "
+                 f"{total:.2f} | |")
+    return "\n".join(lines) + "\n"
+
+
+def check_bench_numbers(fix: bool = False) -> list:
+    import json
+    bench_path = REPO / "BENCH_schedules.json"
+    doc = json.loads(bench_path.read_text())
+    errors = []
+    for rel in BENCH_TABLE_DOCS:
+        f = REPO / rel
+        text = f.read_text()
+        rendered = text
+        for m in BENCH_TABLE_RE.finditer(text):
+            kind, body = m.group(1), m.group(2)
+            try:
+                expect = render_bench_table(kind, doc)
+            except ValueError as e:
+                errors.append(f"{rel}: {e}")
+                continue
+            if body != expect:
+                if fix:
+                    rendered = rendered.replace(m.group(0),
+                                                f"<!-- BENCH_TABLE:{kind} -->"
+                                                f"\n{expect}"
+                                                f"<!-- /BENCH_TABLE -->")
+                else:
+                    errors.append(
+                        f"{rel}: BENCH_TABLE:{kind} is stale vs "
+                        f"BENCH_schedules.json — regenerate the sweep and "
+                        f"run `python tools/check_docs.py --fix`")
+        if fix and rendered != text:
+            f.write_text(rendered)
+            print(f"rewrote BENCH tables in {rel}")
+    return errors
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite stale doc-embedded BENCH tables from the "
+                         "committed BENCH_schedules.json instead of "
+                         "failing on them")
+    args = ap.parse_args(argv)
     errors = (check_links() + check_flags() + check_module_paths()
-              + check_deprecated_imports())
+              + check_deprecated_imports() + check_bench_numbers(args.fix))
     for e in errors:
         print(f"DOCS-DRIFT: {e}", file=sys.stderr)
     if not errors:
-        print("docs check: links, CLI flags, module paths, and the "
-              "deprecation gate all consistent")
+        print("docs check: links, CLI flags, module paths, BENCH perf "
+              "tables, and the deprecation gate all consistent")
     return 1 if errors else 0
 
 

@@ -11,7 +11,9 @@ topologies plus one scaled-up fabric (`PERF_GATE_NAMES`), and passing a
 full sweep document with --measured gates every row it shares with the
 baseline — including the large-topology rows.  Per-stage `compile_stats`
 of the worst offenders are printed on failure so the regression points at
-a stage, not just a number.
+a stage, not just a number.  The §2.3 pack stage of the topologies in
+`PACK_GATE_TOPOS` (the fast-substrate packer's poster children) is gated
+on its own (measured, baseline) wall-clock pair as well.
 
 The gate also exercises online schedule repair (`repro.core.repair`): for
 every pair in `REPAIR_GATE_PAIRS` — switched fabrics under optimum-
@@ -40,6 +42,11 @@ sys.path.insert(0, str(REPO / "src"))
 #: a ratio over a near-zero baseline is all timer noise.
 GATED_STAGES = ("split", "pack")
 ABS_FLOOR = 0.05
+
+#: topologies whose §2.3 pack stage is additionally gated on its own
+#: (measured, baseline) wall-clock pair — the pack hot-path poster child
+#: must not regress even if the aggregate stage budget would absorb it.
+PACK_GATE_TOPOS = ("fattree8p4l2h",)
 
 #: (base spec, transform) pairs the repair gate times: switched topologies
 #: under degrades that preserve the base optimum, so the warm transplant +
@@ -109,9 +116,21 @@ def total_compile_time(doc: dict, pairs) -> float:
 
 def stage_total(doc: dict, pairs, stage: str) -> float:
     """Sum one stage's seconds over the given pairs (rows without
-    instrumentation contribute 0)."""
-    return sum((e.get("compile_stats") or {}).get(stage, 0.0)
-               for e in doc["entries"] if (e["name"], e["kind"]) in pairs)
+    instrumentation contribute 0).  Understands both the BENCH v6
+    ``[{stage, seconds, probes, augments}]`` list and the pre-v6
+    ``{stage: seconds}`` mapping, so the gate still runs against an older
+    committed baseline."""
+    total = 0.0
+    for e in doc["entries"]:
+        if (e["name"], e["kind"]) not in pairs:
+            continue
+        cs = e.get("compile_stats")
+        if isinstance(cs, dict):            # pre-v6 mapping
+            total += cs.get(stage, 0.0)
+        elif cs:                            # v6 list
+            total += sum(row["seconds"] for row in cs
+                         if row["stage"] == stage)
+    return total
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -158,6 +177,15 @@ def main(argv=None) -> int:
             continue
         checks.append((f"stage:{stage}", base,
                        stage_total(measured_doc, pairs, stage)))
+    for topo in PACK_GATE_TOPOS:
+        topo_pairs = {(n, k) for (n, k) in pairs if n == topo}
+        if not topo_pairs:
+            continue
+        base = stage_total(baseline_doc, topo_pairs, "pack")
+        if base < ABS_FLOOR:
+            continue
+        checks.append((f"pack:{topo}", base,
+                       stage_total(measured_doc, topo_pairs, "pack")))
     for label, base, measured in checks:
         budget = args.factor * base
         ok = measured <= budget
