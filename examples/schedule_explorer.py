@@ -9,12 +9,15 @@ splitting, tree packing, chunked pipelining, physical-link loads.
         --topo "torus2d:6x6@fail(0-1)"
     PYTHONPATH=src python examples/schedule_explorer.py --topo hypercube3 \
         --cache /tmp/schedules   # second run replays the artifact
+    PYTHONPATH=src python examples/schedule_explorer.py \
+        --topo circulant16 --kind alltoall   # per-source pruned scatter
 """
 import argparse
 
 from repro.api import Collectives
 from repro.core import (simulate_allgather, simulate_allreduce,
-                        rs_ag_allreduce_runtime, re_bc_allreduce_runtime)
+                        simulate_alltoall, rs_ag_allreduce_runtime,
+                        re_bc_allreduce_runtime)
 from repro.topo import resolve_topology, zoo_specs
 
 
@@ -23,6 +26,10 @@ def main() -> None:
     ap.add_argument("--topo", default="fig1a",
                     help="zoo row name or TopologySpec string "
                          f"(zoo: {', '.join(sorted(zoo_specs()))})")
+    ap.add_argument("--kind", default="allgather",
+                    choices=("allgather", "alltoall"),
+                    help="primary collective to explore (allreduce always "
+                         "rides along for allgather)")
     ap.add_argument("--chunks", type=int, default=32)
     ap.add_argument("--cache", default="",
                     help="schedule artifact cache dir (skip recompilation)")
@@ -30,20 +37,27 @@ def main() -> None:
 
     g = resolve_topology(args.topo)
     print(g.describe())
-    coll = Collectives(cache=args.cache or None, num_chunks=args.chunks,
+    # alltoall pipelines over the N-1 destination blocks, not over chunk
+    # subdivisions — P=1 is the sweep-grade configuration
+    chunks = 1 if args.kind == "alltoall" else args.chunks
+    coll = Collectives(cache=args.cache or None, num_chunks=chunks,
                        verify=True)
-    sched = coll.schedule(g, kind="allgather")
+    sched = coll.schedule(g, kind=args.kind)
     if coll.cache is not None:
         print(coll.cache.describe())
-    print(f"\nallgather: {sched.describe()}")
+    print(f"\n{args.kind}: {sched.describe()}")
     print(f"tree classes: {len(sched.classes)}  "
           f"(depths <= {sched.depth})")
-    rep = simulate_allgather(sched)
+    sim = (simulate_alltoall if args.kind == "alltoall"
+           else simulate_allgather)
+    rep = sim(sched)
     print(f"simulated: {rep.describe()}")
     print("\nbusiest physical links (bytes, per unit data):")
     top = sorted(rep.link_bytes.items(), key=lambda kv: -kv[1])[:8]
     for (u, v), b in top:
         print(f"  {u:3d} -> {v:3d}: {float(b):.4f}")
+    if args.kind == "alltoall":
+        return
     print(f"\nallreduce RS+AG factor: {rs_ag_allreduce_runtime(g)} "
           f"vs RE+BC {re_bc_allreduce_runtime(g)}")
     ar = simulate_allreduce(coll.schedule(g, kind="allreduce"))

@@ -41,7 +41,8 @@ from repro.topo.spec import SpecLike, TopologySpec, resolve_topology
 Artifact = Union[PipelineSchedule, AllReduceSchedule]
 
 #: collective kinds the facade (and the whole stack) understands
-KINDS = ("allgather", "reduce_scatter", "broadcast", "reduce", "allreduce")
+KINDS = ("allgather", "reduce_scatter", "broadcast", "reduce", "allreduce",
+         "alltoall")
 ROOTED_KINDS = ("broadcast", "reduce")
 #: the default `family()` pair — what an allreduce consumer needs
 PAIR_KINDS = ("allgather", "reduce_scatter")
@@ -243,12 +244,21 @@ class Collectives:
         from repro.topo.spec import TransformSpec
         spec = (transform if isinstance(transform, TransformSpec)
                 else TransformSpec.parse_text(transform))
-        if self.opts(opts, **overrides).fixed_k is not None:
+        o = self.opts(opts, **overrides)
+        if o.fixed_k is not None:
             raise RepairError(
                 "repair requires automatic k: the §2.4 fixed-k floor is "
                 "not recorded on artifacts and its floor-scaled capacities "
                 "do not delta-compose — recompile the degraded topology "
                 "cold instead")
+        if (getattr(artifact, "kind", None) == "alltoall"
+                or (not isinstance(artifact,
+                                   (PipelineSchedule, AllReduceSchedule))
+                    and o.kind == "alltoall")):
+            raise RepairError(
+                "repair does not support alltoall artifacts (the merged "
+                "per-source scatter rounds are rebuilt whole-cloth from "
+                "the packing) — recompile the degraded topology instead")
         if not isinstance(artifact, (PipelineSchedule, AllReduceSchedule)):
             artifact = self.schedule(artifact, opts, **overrides)
         if self.cache is not None and use_cache:
@@ -306,6 +316,7 @@ class Collectives:
             "reduce_scatter": tree_mod.tree_reduce_scatter,
             "broadcast": tree_mod.tree_broadcast,
             "reduce": tree_mod.tree_reduce,
+            "alltoall": tree_mod.tree_all_to_all,
         }[o.kind]
 
         def run(x, **kw):

@@ -9,7 +9,7 @@ from .serialize import (CACHE_SCHEMA_VERSION, SCHEDULE_KINDS,  # noqa: F401
                         ensure_claimed, schedule_from_json, schedule_to_json,
                         stats_to_payload)
 from .store import CacheStats, ScheduleCache, default_cache_dir  # noqa: F401
-from .sweep import (COLLECTIVES, FIXED_K_COLLECTIVES,  # noqa: F401
-                    LARGE_NAMES, PERF_GATE_NAMES, SMOKE_NAMES,
-                    claim_mismatches, default_out_path, run_sweep,
-                    sweep_one, sweep_registry)
+from .sweep import (ALLTOALL_CHUNKS, COLLECTIVES,  # noqa: F401
+                    FIXED_K_COLLECTIVES, LARGE_NAMES, PERF_GATE_NAMES,
+                    SMOKE_NAMES, claim_mismatches, default_out_path,
+                    run_sweep, sweep_one, sweep_registry)

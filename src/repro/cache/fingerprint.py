@@ -26,7 +26,11 @@ from repro.core.graph import DiGraph
 # v2: schedule payloads carry an explicit `root` field (single-root
 # broadcast/reduce kinds; null for allgather/reduce-scatter), and the kind
 # vocabulary grew to {allgather, reduce_scatter, broadcast, reduce}.
-FORMAT_VERSION = 2
+# v3: the kind vocabulary grew `alltoall` (per-source scatter-tree
+# schedules whose slots fold the destination in: slot = dest·k·P +
+# subslot); the field layout is unchanged, but older readers would
+# mis-simulate an alltoall payload, so the version gates them out.
+FORMAT_VERSION = 3
 
 # Modules whose behaviour determines what a compiled schedule looks like.
 _COMPILER_MODULES = (

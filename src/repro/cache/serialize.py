@@ -37,19 +37,21 @@ SCHEDULE_FORMAT = "repro.schedule"
 ALLREDUCE_FORMAT = "repro.allreduce"
 STATS_FORMAT = "repro.compile_stats"
 REPAIR_FORMAT = "repro.repair"
-# Version of the *cache directory* schema (artifact payloads stay at
+# Version of the *cache directory* schema (artifact payloads live at
 # FORMAT_VERSION): v3 adds the per-artifact compile-stats sidecar and the
 # flock-guarded index.  v5 adds transform-keyed `.repair` sidecars: a
 # repaired artifact is stored under its natural (degraded-topology) key,
 # and a `repair-...` sidecar keyed by base fingerprint + transform records
 # `repair_time_s` and points at that artifact.  Readers accept older
-# directories (no sidecar → no repair metadata) — the artifact payload
-# format itself is unchanged.
-CACHE_SCHEMA_VERSION = 5
+# directories (no sidecar → no repair metadata).  v6 rides the artifact
+# FORMAT_VERSION 2 → 3 bump (the kind vocabulary grew `alltoall`); the
+# directory layout itself is unchanged.
+CACHE_SCHEMA_VERSION = 6
 
 # every kind a `repro.schedule` payload may carry (allreduce artifacts are
 # the nested `repro.allreduce` format: an rs + an ag payload)
-SCHEDULE_KINDS = ("allgather", "reduce_scatter", "broadcast", "reduce")
+SCHEDULE_KINDS = ("allgather", "reduce_scatter", "broadcast", "reduce",
+                  "alltoall")
 
 
 class SerializationError(ValueError):
@@ -94,7 +96,8 @@ def ensure_claimed(sched: PipelineSchedule, verify: bool = False) -> Fraction:
         fn = {"allgather": sim.simulate_allgather,
               "reduce_scatter": sim.simulate_reduce_scatter,
               "broadcast": sim.simulate_broadcast,
-              "reduce": sim.simulate_reduce}[sched.kind]
+              "reduce": sim.simulate_reduce,
+              "alltoall": sim.simulate_alltoall}[sched.kind]
         sched.claimed_runtime = fn(sched, verify=verify).sim_time
     return sched.claimed_runtime
 

@@ -348,6 +348,18 @@ class ScheduleCache:
         self._store(key, sched)
         return sched
 
+    def alltoall(self, topo: DiGraph, num_chunks: int = 8,
+                 fixed_k: Optional[int] = None) -> PipelineSchedule:
+        key = self.key("alltoall", topo, num_chunks, fixed_k)
+        hit = self._load(key, allreduce=False)
+        if hit is not None:
+            return hit
+        sched = schedule_mod.compile_alltoall(
+            topo, num_chunks=num_chunks, fixed_k=fixed_k,
+            verify=self.verify_on_compile)
+        self._store(key, sched)
+        return sched
+
     def allreduce(self, topo: DiGraph, num_chunks: int = 8,
                   fixed_k: Optional[int] = None) -> AllReduceSchedule:
         key = self.key("allreduce", topo, num_chunks, fixed_k)

@@ -17,6 +17,10 @@ Collectives swept (``--collectives`` selects a subset):
                                node) and the edge-reversed reduction
   allreduce                  — Appendix B RS+AG composition, cached as one
                                artifact
+  alltoall                   — per-source pruned scatter over the allgather
+                               family's packed trees (swept at P = 1: the
+                               N−1 destination blocks already fill the
+                               pipeline, so re-chunking buys nothing)
 
 The sweep compiles each topology's collectives **as one family**
 (`plan.compile_family` / `ScheduleCache.family`): the §2.1 solve and the
@@ -95,7 +99,10 @@ BENCH_FORMAT = "repro.bench_schedules"
 # v6: normalizes ``compile_stats`` from a {stage: seconds} mapping to an
 # aggregatable ``[{stage, seconds, probes, augments}]`` list in pipeline
 # order (see cache README).
-BENCH_VERSION = 6
+# v7: adds ``alltoall`` rows (swept at P = ALLTOALL_CHUNKS, lower bound =
+# the exact bisection-cut `alltoall_lb`); repair rows for alltoall are
+# always ``skipped`` (repair rejects the kind).
+BENCH_VERSION = 7
 SMOKE_NAMES = ("ring8", "hypercube3", "fig1a")
 # the scaled-up zoo rows (64-compute fabrics where split/pack dominate);
 # all of them are committed BENCH rows, and a full sweep document fed to
@@ -110,9 +117,14 @@ LARGE_NAMES = ("torus8x8", "torus8x8_failed", "fattree8p4l2h",
 # individually)
 PERF_GATE_NAMES = SMOKE_NAMES + ("dragonfly6x4", "fattree8p4l2h")
 COLLECTIVES = ("allgather", "reduce_scatter", "broadcast", "reduce",
-               "allreduce")
+               "allreduce", "alltoall")
 # kinds a --fixed-k sweep exercises (rooted kinds always use k = λ(root))
-FIXED_K_COLLECTIVES = ("allgather", "reduce_scatter", "allreduce")
+FIXED_K_COLLECTIVES = ("allgather", "reduce_scatter", "allreduce",
+                       "alltoall")
+# alltoall sweeps at P = 1: each spanning tree already pipelines N−1
+# distinct destination blocks back-to-back, so its rounds stay full
+# without sub-chunking and the P >= depth acceptance rule does not apply
+ALLTOALL_CHUNKS = 1
 
 
 def default_out_path(partial: bool) -> str:
@@ -191,6 +203,7 @@ _SIMULATORS = {
     "broadcast": sim.simulate_broadcast,
     "reduce": sim.simulate_reduce,
     "allreduce": sim.simulate_allreduce,
+    "alltoall": sim.simulate_alltoall,
 }
 
 
@@ -298,16 +311,39 @@ def _entry(name: str, kind: str, g: DiGraph, root: Optional[int],
 def sweep_one(name: str, kind: str = "allgather", num_chunks: int = 16,
               cache_dir: Optional[str] = None,
               fixed_k: Optional[int] = None) -> Dict[str, Any]:
-    """Compile one (topology, collective) pair (P >= depth enforced), verify
+    """Compile one (topology, collective) pair (P >= depth enforced; alltoall
+    sweeps at P = ALLTOALL_CHUNKS, exempt from the rule), verify
     chunk-by-chunk, simulate, and return a scoreboard entry."""
     g = _build_topology(name)
     root = min(g.compute) if kind in ("broadcast", "reduce") else None
+    if kind == "alltoall":
+        num_chunks = ALLTOALL_CHUNKS
     t0 = time.perf_counter()
     sched = _compile(kind, g, num_chunks, cache_dir, root, fixed_k)
-    if _depth(sched) > num_chunks:     # acceptance requires P >= tree depth
+    if kind != "alltoall" and _depth(sched) > num_chunks:
+        # acceptance requires P >= tree depth
         sched = _compile(kind, g, _depth(sched), cache_dir, root, fixed_k)
     compile_time = time.perf_counter() - t0
     return _entry(name, kind, g, root, fixed_k, sched, compile_time)
+
+
+def _alltoall_artifact(g: DiGraph, cache_dir: Optional[str],
+                       fixed_k: Optional[int], packed: Dict[str, Any]):
+    """One alltoall sweep artifact at P = ALLTOALL_CHUNKS.  On the
+    fresh-compile path the allgather family's packed plan is re-tagged and
+    only rounds + emit run (stages 1-3 are kind-independent — identical
+    bytes to a cold `compile_alltoall`); the cache path (no packed plans)
+    goes through the facade, which replays or compiles as usual."""
+    if "allgather" in packed:
+        import dataclasses
+        from repro.core import plan as plan_mod
+        src = packed["allgather"]
+        p = dataclasses.replace(
+            src, kind="alltoall", num_chunks=ALLTOALL_CHUNKS,
+            stats=dataclasses.replace(src.stats.copy(), kind="alltoall"))
+        return plan_mod.emit(plan_mod.rounds(p))
+    return Collectives(cache=cache_dir).schedule(
+        g, kind="alltoall", num_chunks=ALLTOALL_CHUNKS, fixed_k=fixed_k)
 
 
 def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
@@ -315,7 +351,10 @@ def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
                     pack_jobs: int = 1) -> List[Dict[str, Any]]:
     """All of one topology's sweep rows, compiled as a single family so
     solve/split/pack are amortized across the collective kinds; each row's
-    ``compile_time_s`` is its kind's marginal wall time.
+    ``compile_time_s`` is its kind's marginal wall time.  Alltoall is
+    carved out of the family call (it sweeps at P = ALLTOALL_CHUNKS, not
+    the sweep's chunk count) and built from the family's packed allgather
+    plan — see `_alltoall_artifact`.
 
     Under --fixed-k, topologies that can't compile for the requested k
     (e.g. the floor-scaled graph loses the Eulerian condition) fall back to
@@ -328,11 +367,19 @@ def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
     g = _build_topology(name)
     root = (min(g.compute)
             if any(k in ("broadcast", "reduce") for k in kinds) else None)
+    fam_kinds = [k for k in kinds if k != "alltoall"]
     try:
         timings: Dict[str, float] = {}
         packed: Dict[str, Any] = {}
-        arts = _compile_family(g, kinds, num_chunks, cache_dir, root,
-                               fixed_k, timings, packed, pack_jobs)
+        arts: Dict[str, Any] = {}
+        if fam_kinds:
+            arts = _compile_family(g, fam_kinds, num_chunks, cache_dir, root,
+                                   fixed_k, timings, packed, pack_jobs)
+        if "alltoall" in kinds:
+            t0 = time.perf_counter()
+            arts["alltoall"] = _alltoall_artifact(g, cache_dir, fixed_k,
+                                                  packed)
+            timings["alltoall"] = time.perf_counter() - t0
     except (EdgeSplitError, ValueError) as e:
         if fixed_k is None:
             raise
@@ -351,7 +398,9 @@ def _sweep_topology(name: str, kinds: Sequence[str], num_chunks: int,
         sched = arts[kind]
         kind_root = root if kind in ("broadcast", "reduce") else None
         extra = 0.0
-        if _depth(sched) > num_chunks:  # acceptance requires P >= tree depth
+        if kind != "alltoall" and _depth(sched) > num_chunks:
+            # acceptance requires P >= tree depth (alltoall exempt: its
+            # destination blocks fill the pipeline at P = 1)
             t0 = time.perf_counter()
             need = _depth(sched)
             if kind == "allreduce" and "reduce_scatter" in packed:
@@ -402,6 +451,15 @@ def _repair_topology(name: str, kinds: Sequence[str],
     coll = Collectives(cache=None)
     rows: List[Dict[str, Any]] = []
     for kind in kinds:
+        if kind == "alltoall":
+            # repair rejects the kind outright — record the skip without
+            # paying for the base + cold compiles it would take to find out
+            rows.append({"name": name, "kind": kind,
+                         "transform": str(transform),
+                         "base_topology": base_g.name,
+                         "skipped": "RepairError: repair does not support "
+                                    "alltoall artifacts"})
+            continue
         root = min(base_g.compute) if kind in ("broadcast", "reduce") \
             else None
         base_art = coll.schedule(base_g, kind=kind, root=root,

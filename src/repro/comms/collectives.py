@@ -120,6 +120,49 @@ def tree_reduce_scatter(x: jax.Array, prog: PermuteProgram, axis_name: str,
 
 
 # ---------------------------------------------------------------------- #
+# alltoall (per-source pruned scatter over the packed spanning trees)
+# ---------------------------------------------------------------------- #
+
+def tree_all_to_all(x: jax.Array, prog: PermuteProgram, axis_name: str
+                    ) -> jax.Array:
+    """Bandwidth-optimal pipelined all-to-all of the destination blocks `x`.
+
+    `x` is [A, *block]: ``x[w]`` is this device's block for destination
+    ``w``.  Returns [A, *block] with ``out[r]`` = source r's block for this
+    device, matching ``jax.lax.all_to_all(x, axis_name, 0, 0)``.
+
+    Alltoall programs fold the destination into the slot index
+    (slots_per_shard = A·k·P; slot = dest·k·P + subslot), so each source's
+    whole send buffer is staged contiguously at rows [me·S, (me+1)·S) in
+    destination-major order.  The diagonal block is never on the wire (the
+    schedule prunes it); it stays where this device staged it, and the
+    gather below reads it back from our own rows.  Transit chunks a device
+    forwards for others land at rows whose dest index differs from ours,
+    so they never clobber an output row."""
+    if prog.kind != "alltoall":
+        raise ValueError(f"program kind {prog.kind} != alltoall")
+    a, s = prog.axis_size, prog.slots_per_shard
+    if x.shape[0] != a:
+        raise ValueError(f"leading dim {x.shape[0]} != axis size {a}")
+    kp = s // a                       # subslots per destination block (k·P)
+    block_shape = x.shape[1:]
+    block_elems = int(np.prod(block_shape)) if len(block_shape) else 1
+    ce = _chunk_elems(block_elems, kp)
+    me = _me(axis_name)
+    flat = x.reshape(a, block_elems)
+    flat = jnp.pad(flat, ((0, 0), (0, kp * ce - block_elems)))
+    buf = jnp.zeros((a * s + 1, ce), dtype=x.dtype)
+    buf = jax.lax.dynamic_update_slice_in_dim(
+        buf, flat.reshape(s, ce), me * s, axis=0)
+    buf = _run_program(buf, prog, axis_name, mode="set")
+    # source r's block for us sits at rows r*S + me*kp + t
+    rows = (jnp.arange(a) * s)[:, None] + me * kp + jnp.arange(kp)[None, :]
+    out = jnp.take(buf, rows.reshape(-1), axis=0)
+    out = out.reshape(a, kp * ce)[:, :block_elems]
+    return out.reshape((a,) + block_shape)
+
+
+# ---------------------------------------------------------------------- #
 # broadcast / reduce (paper Appendix A and its edge-reversed dual)
 # ---------------------------------------------------------------------- #
 

@@ -74,6 +74,8 @@ class CollectiveContext:
         self._allreduce: Dict[str, object] = {}
         self._broadcast: Dict[Tuple[str, int], PermuteProgram] = {}
         self._broadcast_scheds: Dict[Tuple[str, int], PipelineSchedule] = {}
+        self._alltoall: Dict[str, PermuteProgram] = {}
+        self._alltoall_scheds: Dict[str, PipelineSchedule] = {}
 
     @property
     def schedule_cache(self):
@@ -135,6 +137,19 @@ class CollectiveContext:
             self._broadcast[key] = self.collectives.lower(sched)
         return self._broadcast[key]
 
+    def alltoall_program(self, axis: str) -> PermuteProgram:
+        """Executable all-to-all program for `axis` (expert dispatch /
+        sharded transpose), cache-backed like every other kind and memoized
+        per axis.  Compiled at P = 1: each spanning tree already pipelines
+        A−1 destination blocks back-to-back, so sub-chunking only multiplies
+        ppermute calls without shortening the pipeline."""
+        if axis not in self._alltoall:
+            sched = self.collectives.schedule(
+                self.topology(axis), kind="alltoall", num_chunks=1)
+            self._alltoall_scheds[axis] = sched
+            self._alltoall[axis] = self.collectives.lower(sched)
+        return self._alltoall[axis]
+
     def allreduce_programs(self, axes: Sequence[str]
                            ) -> Tuple[Tuple[str, PermuteProgram,
                                             PermuteProgram], ...]:
@@ -161,7 +176,9 @@ class CollectiveContext:
         fabric.  All repairs are staged off to the side first and committed
         in one pass at the end, so a failing repair (e.g. a fault that
         disconnects an axis) raises without leaving the context half-
-        swapped.  Returns ``{axis: [RepairReport, ...]}``.
+        swapped.  An affected axis holding a compiled alltoall program
+        raises `RepairError` up front (repair does not support alltoall).
+        Returns ``{axis: [RepairReport, ...]}``.
         """
         from repro.topo.spec import TransformSpec
         spec = (transform if isinstance(transform, TransformSpec)
@@ -181,6 +198,13 @@ class CollectiveContext:
             topo = self.topology(a)
             if (u, v) not in topo.cap and (v, u) not in topo.cap:
                 continue        # the fault is not on this axis's fabric
+            if a in self._alltoall_scheds:
+                from repro.core.repair import RepairError
+                raise RepairError(
+                    f"axis {a!r} holds a compiled alltoall program and "
+                    f"repair does not support alltoall — rebuild the "
+                    f"context against the degraded fabric instead (nothing "
+                    f"was swapped)")
             axis_reports = []
             degraded: Optional[DiGraph] = None
             if a in self._cache:
@@ -242,6 +266,8 @@ class CollectiveContext:
             add(f"{a}.allreduce", ar.ag)
         for (a, root), sched in self._broadcast_scheds.items():
             add(f"{a}.r{root}", sched)
+        for a, sched in self._alltoall_scheds.items():
+            add(f"{a}.alltoall", sched)
         if len(lines) == 1:
             return "schedule compile stages: (nothing compiled yet)"
         return "\n".join(lines)

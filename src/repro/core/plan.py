@@ -45,16 +45,25 @@ from .maxflow import COUNTERS
 from .optimality import Optimality, solve_optimality
 from .schedule import (AllReduceSchedule, PipelineSchedule, Send,
                        _assign_paths, _build_allgather_rounds,
-                       broadcast_lambda)
+                       _build_alltoall_rounds, broadcast_lambda)
 
 #: kinds a single `CollectivePlan` can carry (allreduce is a composite of
 #: two plans — see `compile_family`).
-PLAN_KINDS = ("allgather", "reduce_scatter", "broadcast", "reduce")
+PLAN_KINDS = ("allgather", "reduce_scatter", "broadcast", "reduce",
+              "alltoall")
 FAMILY_KINDS = PLAN_KINDS + ("allreduce",)
 STAGES = ("solve", "split", "pack", "rounds", "lower")
 
 _DUAL = frozenset(("reduce_scatter", "reduce"))     # compile forward on G^T
 _ROOTED = frozenset(("broadcast", "reduce"))        # single-root λ family
+#: same-orientation siblings whose solve/split/pack products are identical
+#: (stages 1-3 never look at the kind beyond rooted-ness/orientation, so an
+#: alltoall packing IS the allgather packing — only the rounds differ)
+_FORWARD_SHARE = {"allgather": "alltoall", "alltoall": "allgather"}
+#: transpose-dual donors for opt sharing (see `adopt_solution`)
+_OPT_DONORS = {"allgather": ("reduce_scatter",),
+               "alltoall": ("reduce_scatter",),
+               "reduce_scatter": ("allgather", "alltoall")}
 
 
 class PlanError(ValueError):
@@ -343,7 +352,11 @@ def rounds(plan: CollectivePlan) -> CollectivePlan:
     physical path assignment binding tree edges to switch paths of G."""
     _require(plan, "rounds", "classes", "rounds")
     t0 = time.perf_counter()
-    rnds, offsets = _build_allgather_rounds(plan.classes, plan.num_chunks)
+    if plan.kind == "alltoall":
+        rnds, offsets = _build_alltoall_rounds(plan.classes, plan.num_chunks,
+                                               plan.opt.k)
+    else:
+        rnds, offsets = _build_allgather_rounds(plan.classes, plan.num_chunks)
     paths = _assign_paths(plan.split, plan.classes)
     wall = time.perf_counter() - t0
     return dataclasses.replace(
@@ -423,7 +436,9 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
       (exact — see `adopt_solution`), so allreduce never solves twice.
     * split/pack/rounds products are computed once per orientation and
       reused: `allreduce` is assembled from the same packed products as
-      the `allgather` / `reduce_scatter` rows when requested together.
+      the `allgather` / `reduce_scatter` rows when requested together,
+      and `alltoall` re-tags allgather's packed products outright (stages
+      1-3 are kind-independent; only the rounds construction differs).
     * Rooted kinds (`broadcast`, `reduce`) need `root`; `fixed_k` applies
       to the allgather family only (rooted kinds always use k = λ(root)).
     * A `timings` dict (if given) receives each kind's *marginal* wall
@@ -460,8 +475,12 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
         # RS then AG — the same order the emit loop below uses)
         plan_kinds: List[str] = []
         for kind in kinds:
+            # alltoall shares allgather's packed products outright, so the
+            # workers pack allgather once and packed_plan() re-tags it
             for pk in (("reduce_scatter", "allgather")
-                       if kind == "allreduce" else (kind,)):
+                       if kind == "allreduce"
+                       else ("allgather",) if kind == "alltoall"
+                       else (kind,)):
                 if pk not in plan_kinds:
                     plan_kinds.append(pk)
         if len(plan_kinds) > 1:
@@ -493,14 +512,24 @@ def compile_family(topo: DiGraph, kinds: Sequence[str] = FAMILY_KINDS,
     def packed_plan(kind: str) -> CollectivePlan:
         if kind in packed:
             return packed[kind]
+        sib = _FORWARD_SHARE.get(kind)
+        if sib is not None and sib in packed:
+            # same orientation, same (fixed-)k: stages 1-3 are identical,
+            # so re-tag the sibling's packed products instead of recomputing
+            src = packed[sib]
+            p = dataclasses.replace(
+                src, kind=kind,
+                stats=dataclasses.replace(src.stats.copy(), kind=kind))
+            packed[kind] = p
+            return p
         p = plan_for(kind, topo, num_chunks=num_chunks,
                      root=root if kind in _ROOTED else None,
                      fixed_k=fixed_k if kind not in _ROOTED else None,
                      pair_priority=pair_priority, verify=verify)
-        dual = {"allgather": "reduce_scatter",
-                "reduce_scatter": "allgather"}.get(kind)
-        if (dual is not None and fixed_k is None and dual in packed):
-            p = adopt_solution(p, packed[dual].opt)
+        donor = next((d for d in _OPT_DONORS.get(kind, ())
+                      if d in packed), None) if fixed_k is None else None
+        if donor is not None:
+            p = adopt_solution(p, packed[donor].opt)
         else:
             p = solve(p)
         p = pack(split(p))

@@ -276,6 +276,12 @@ def repair_schedule(artifact: PipelineSchedule, transform,
     spec = _transform_of(transform)
     if artifact.kind not in plan_mod.PLAN_KINDS:
         raise RepairError(f"cannot repair artifact kind {artifact.kind!r}")
+    if artifact.kind == "alltoall":
+        raise RepairError(
+            "cannot repair alltoall artifacts: the merged per-source "
+            "scatter rounds are rebuilt whole-cloth from the packing, so a "
+            "delta-recompile saves nothing over compiling the degraded "
+            "topology cold — recompile instead")
     base_topo = artifact.topo
     try:
         degraded = spec.apply(base_topo)

@@ -17,6 +17,12 @@ Builders (the full collective family the paper's abstract promises):
   compile_reduce         — broadcast on the transpose graph, reversed, with
                            the accumulation (op fusion) happening bottom-up
                            along each reversed tree
+  compile_alltoall       — per-source pruned scatter over the same packed
+                           spanning trees (Basu/Pal/Zhao et al. direct-
+                           connect all-to-all): tree edge (a, b) of root r
+                           forwards only the chunks whose destination lies
+                           in subtree(b), so each (r, w) block travels the
+                           unique r→w tree path and nothing else
 
 All of them are thin wrappers over the staged pipeline in
 `repro.core.plan` (solve → split → pack → rounds → lower), which records
@@ -51,7 +57,9 @@ class Send(NamedTuple):
     src: int
     dst: int
     root: int      # whose shard this chunk belongs to
-    slot: int      # chunk slot within the root's shard, in [0, k*P)
+    slot: int      # chunk slot within the root's shard: [0, k*P) for the
+                   # allgather family, [0, N*k*P) for alltoall (the slot
+                   # folds the destination in: dest_index*k*P + subslot)
     cls: int       # class index (for path assignment / debugging)
 
 
@@ -63,7 +71,7 @@ class PipelineSchedule:
     `repro.cache.serialize`; lowered to ppermute programs by
     `repro.comms.compile_program`."""
     kind: str                      # allgather | reduce_scatter |
-                                   # broadcast | reduce
+                                   # broadcast | reduce | alltoall
     topo: DiGraph                  # original G (possibly with switches)
     dstar: DiGraph                 # logical compute-only graph (caps U*b_e)
     opt: Optimality
@@ -104,6 +112,11 @@ class PipelineSchedule:
 
     @property
     def slots_per_shard(self) -> int:
+        """Chunk slots per source shard.  The allgather family splits each
+        node's shard into k·P slots; alltoall carries N distinct destination
+        blocks per source, each split into k·P subslots."""
+        if self.kind == "alltoall":
+            return self.num_nodes * self.opt.k * self.num_chunks
         return self.opt.k * self.num_chunks
 
     @property
@@ -179,6 +192,121 @@ def _build_allgather_rounds(
             done = all(
                 received[ci].get(v, 0) == total[ci]
                 for ci, c in enumerate(classes) for v in c.verts)
+    return rounds, offset
+
+
+# ---------------------------------------------------------------------- #
+# All-to-all round construction (pruned scatter over the same packed trees)
+# ---------------------------------------------------------------------- #
+
+def _build_alltoall_rounds(
+        classes: Sequence[TreeClass], num_chunks: int, k: int
+) -> Tuple[List[List[Send]], List[int]]:
+    """Per-source scatter rounds over the all-roots §2.3 packing.
+
+    Each spanning tree of root r carries r's traffic to *every*
+    destination, but pruned: edge (a, b) forwards only the chunks whose
+    destination lies in subtree(b), so the (r, w) block travels exactly
+    the unique r→w tree path.  Slots fold the destination in —
+    ``slot = dest_index·k·P + class_offset + t`` — which keeps `Send`,
+    the serializer and the executor's ``root·S + slot`` addressing
+    unchanged (S grows to N·k·P).  The diagonal (r, r) block is never
+    sent; its buffer rows are simply the staged input.
+
+    Per round each tree edge forwards up to ``mult`` chunks (its capacity
+    share) in a fixed deepest-destination-first order, store-and-forward:
+    a chunk crosses an edge strictly after the round that delivered it to
+    the edge's tail.  Returns ``(rounds, class_slot_offset)`` with the
+    same offset semantics as the allgather builder.
+    """
+    offset: List[int] = []
+    per_root: Dict[int, int] = {}
+    for c in classes:
+        offset.append(per_root.get(c.root, 0))
+        per_root[c.root] = per_root.get(c.root, 0) + c.mult * num_chunks
+    stride = k * num_chunks                    # subslots per dest block
+    nodes = sorted({v for c in classes for v in c.verts})
+    pos = {v: i for i, v in enumerate(nodes)}
+
+    # static per-class structure: per-edge destination queues (deepest
+    # destination first — keeps downstream edges fed early) and the child
+    # hop toward every destination below a vertex.  Queue order is a
+    # single global (depth, id) key per class, so every edge consumes its
+    # queue as an order-preserving subsequence of its parent's — arrivals
+    # at the tail are always a prefix of the queue.
+    queues: List[Dict[Edge, List[int]]] = []
+    routes: List[Dict[Tuple[int, int], Edge]] = []
+    for c in classes:
+        children: Dict[int, List[int]] = {}
+        for (a, b) in c.edges:
+            children.setdefault(a, []).append(b)
+        depth = {c.root: 0}
+        order = [c.root]
+        for v in order:
+            for w in children.get(v, ()):
+                depth[w] = depth[v] + 1
+                order.append(w)
+        sub: Dict[int, List[int]] = {}
+        for v in reversed(order):              # leaves first
+            s = [v]
+            for w in children.get(v, ()):
+                s.extend(sub[w])
+            sub[v] = s
+        q: Dict[Edge, List[int]] = {}
+        rt: Dict[Tuple[int, int], Edge] = {}
+        for (a, b) in c.edges:
+            q[(a, b)] = sorted(sub[b], key=lambda w: (-depth[w], w))
+            for w in sub[b]:
+                rt[(a, w)] = (a, b)
+        queues.append(q)
+        routes.append(rt)
+
+    mp = [c.mult * num_chunks for c in classes]   # chunks per (class, dest)
+    sent = [dict.fromkeys(queues[ci], 0) for ci in range(len(classes))]
+    avail: List[Dict[Edge, int]] = []
+    for ci, c in enumerate(classes):
+        avail.append({e: len(dests) * mp[ci] if e[0] == c.root else 0
+                      for e, dests in queues[ci].items()})
+    active = [list(c.edges) for c in classes]
+    remaining = sum(len(dests) * mp[ci]
+                    for ci in range(len(classes))
+                    for dests in queues[ci].values())
+
+    rounds: List[List[Send]] = []
+    while remaining:
+        this_round: List[Send] = []
+        # deliveries land after the round: reads below see pre-round state
+        pending: List[Tuple[Dict[Edge, int], Edge]] = []
+        for ci, c in enumerate(classes):
+            edges = active[ci]
+            if not edges:
+                continue
+            q_ci, s_ci, a_ci, rt = queues[ci], sent[ci], avail[ci], routes[ci]
+            mult, m, off, root = c.mult, mp[ci], offset[ci], c.root
+            still: List[Edge] = []
+            for e in edges:
+                dests = q_ci[e]
+                s = s_ci[e]
+                n = min(mult, a_ci[e] - s)
+                if n > 0:
+                    a, b = e
+                    for j in range(s, s + n):
+                        w = dests[j // m]
+                        this_round.append(
+                            Send(a, b, root, pos[w] * stride + off + j % m,
+                                 ci))
+                        if w != b:
+                            pending.append((a_ci, rt[(b, w)]))
+                    s_ci[e] = s = s + n
+                    remaining -= n
+                if s < len(dests) * m:
+                    still.append(e)
+            active[ci] = still
+        for a_ci, e in pending:
+            a_ci[e] += 1
+        if not this_round:
+            raise RuntimeError("alltoall pipeline stalled before completion")
+        rounds.append(this_round)
     return rounds, offset
 
 
@@ -327,6 +455,23 @@ def compile_broadcast(topo: DiGraph, root: int, num_chunks: int = 8,
     from . import plan as plan_mod
     return plan_mod.compile_plan(plan_mod.plan_for(
         "broadcast", topo, num_chunks=num_chunks, root=root,
+        pair_priority=pair_priority, verify=verify))
+
+
+def compile_alltoall(topo: DiGraph, num_chunks: int = 8,
+                     fixed_k: Optional[int] = None,
+                     pair_priority=None, verify: bool = False
+                     ) -> PipelineSchedule:
+    """All-to-all as per-source pruned scatter (Basu/Pal/Zhao et al.,
+    direct-connect all-to-all): reuse the §2.1 solve and the all-roots
+    §2.2/§2.3 packing verbatim — the solve, split and pack products are
+    identical to allgather's — and replace only the round construction:
+    each source's k trees scatter N−1 distinct destination blocks along
+    their unique tree paths instead of broadcasting one shard.  Shares
+    packed products with allgather under `plan.compile_family`."""
+    from . import plan as plan_mod
+    return plan_mod.compile_plan(plan_mod.plan_for(
+        "alltoall", topo, num_chunks=num_chunks, fixed_k=fixed_k,
         pair_priority=pair_priority, verify=verify))
 
 

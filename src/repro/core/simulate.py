@@ -72,10 +72,12 @@ def _round_times(sched: PipelineSchedule, data_size: Fraction,
                  reverse_paths: bool) -> Tuple[Fraction, Dict[Edge, Fraction]]:
     """Total pipelined runtime + physical per-link byte totals."""
     n = sched.num_nodes
-    # rooted collectives move one buffer of M bytes; the gathered/scattered
-    # family moves N shards of M/N bytes each
+    # rooted collectives move one buffer of M bytes; alltoall moves one
+    # send buffer of M bytes per node (N blocks of M/N, slots_per_shard
+    # already counts all N·k·P of them); the gathered/scattered family
+    # moves N shards of M/N bytes each
     chunk = Fraction(data_size, sched.slots_per_shard) \
-        if sched.kind in ("broadcast", "reduce") else \
+        if sched.kind in ("broadcast", "reduce", "alltoall") else \
         Fraction(data_size, n * sched.slots_per_shard)
     # reduce-scatter schedules carry paths in transpose-graph orientation;
     # after flipping the hops below they are in original-graph orientation,
@@ -295,6 +297,60 @@ def simulate_reduce_scatter(sched: PipelineSchedule,
     t, link_bytes = _round_times(sched, data_size, reverse_paths=True)
     lb = data_size * sched.lb_runtime_factor()
     return SimReport("reduce_scatter", len(sched.rounds), t, lb, link_bytes,
+                     sched.num_chunks)
+
+
+# ---------------------------------------------------------------------- #
+# alltoall (per-source pruned scatter)
+# ---------------------------------------------------------------------- #
+
+def verify_alltoall_delivery(sched: PipelineSchedule) -> None:
+    """Replay: chunk (root=r, slot=dest·kP+sub) must end at its destination,
+    store-and-forward enforced; the diagonal (r → r) block must never be
+    scheduled (its buffer rows are the staged input)."""
+    nodes = sched.nodes
+    stride = sched.k * sched.num_chunks          # subslots per dest block
+    pos = {v: i for i, v in enumerate(nodes)}
+    have: Dict[int, Set[Tuple[int, int]]] = {
+        v: {(v, s) for s in range(sched.slots_per_shard)} for v in nodes}
+    for rnd_i, rnd in enumerate(sched.rounds):
+        incoming: List[Tuple[int, Tuple[int, int]]] = []
+        for s in rnd:
+            chunk = (s.root, s.slot)
+            if chunk not in have[s.src]:
+                raise ScheduleError(
+                    f"round {rnd_i}: {s.src}->{s.dst} forwards {chunk} "
+                    f"not yet held (store-and-forward violation)")
+            if s.slot // stride == pos[s.root]:
+                raise ScheduleError(
+                    f"round {rnd_i}: diagonal block of root {s.root} "
+                    f"scheduled ({s.src}->{s.dst} slot {s.slot}) — the "
+                    f"self block never travels")
+            incoming.append((s.dst, chunk))
+        for dst, chunk in incoming:
+            have[dst].add(chunk)
+    for w in nodes:
+        want = {(r, pos[w] * stride + t)
+                for r in nodes if r != w for t in range(stride)}
+        missing = want - have[w]
+        if missing:
+            raise ScheduleError(
+                f"alltoall: node {w} missing chunks, e.g. "
+                f"{sorted(missing)[:5]}")
+
+
+def simulate_alltoall(sched: PipelineSchedule,
+                      data_size: Fraction = Fraction(1),
+                      verify: bool = True) -> SimReport:
+    """Exact pipelined alltoall runtime on the physical topology;
+    lb_time is the certified-cut bound `alltoall_lb` — for any compute
+    cut S, the |S|·(N−|S|) cross blocks of M/N bytes must cross B+(S)."""
+    if verify:
+        verify_alltoall_delivery(sched)
+    from .lower_bounds import alltoall_lb
+    t, link_bytes = _round_times(sched, data_size, reverse_paths=False)
+    lb = data_size * alltoall_lb(sched.topo)
+    return SimReport("alltoall", len(sched.rounds), t, lb, link_bytes,
                      sched.num_chunks)
 
 

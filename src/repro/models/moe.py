@@ -119,3 +119,88 @@ def moe_forward(p: Params, cfg: ModelConfig, x: jax.Array
     router_prob = probs.mean(axis=(0, 1))
     aux = e * jnp.sum(density * router_prob)
     return y.reshape(b, s, d), aux
+
+
+def moe_forward_alltoall(p: Params, cfg: ModelConfig, x: jax.Array,
+                         axis_name: str, all_to_all=None
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE forward for use INSIDE `shard_map` over
+    `axis_name`: experts are sharded across the axis (device w owns the
+    contiguous slice of num_experts/A experts), tokens stay data-parallel.
+    Routing and capacity dropping run locally, the destination-major
+    [A, (E/A)·cap, d] dispatch buffer crosses the fabric through
+    `all_to_all`, each device runs its local expert slices (the full
+    weights are passed in; the slice happens here), and a second
+    all-to-all carries the results home.
+
+    ``all_to_all`` defaults to ``jax.lax.all_to_all``; pass a bound
+    `repro.comms.tree_all_to_all` to ride a compiled bandwidth-optimal
+    schedule instead — only the transport differs, so outputs match
+    exactly.
+
+    x: [B, S, d] local token shard -> (out [B, S, d], aux loss scalar).
+    """
+    b, s_len, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    a = jax.lax.psum(1, axis_name)
+    if e % a:
+        raise ValueError(f"num_experts {e} not divisible by axis size {a}")
+    el = e // a
+    me = jax.lax.axis_index(axis_name)
+    if all_to_all is None:
+        def all_to_all(v):
+            return jax.lax.all_to_all(v, axis_name, 0, 0)
+    t = b * s_len
+    xg = x.reshape(t, d)
+
+    logits = (xg @ p["router"]).astype(jnp.float32)            # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)                     # [T,k]
+    weights = weights / jnp.maximum(
+        weights.sum(axis=-1, keepdims=True), 1e-9)
+
+    # local capacity per expert: every source may ship up to `cap` tokens
+    # to each expert, so an expert sees at most A·cap tokens in total
+    cap = int(max(1, -(-t * k * cfg.capacity_factor // e)))
+    e_flat = idx.reshape(t * k)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                              e_flat[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    slot = jnp.where(keep, e_flat * cap + pos, e * cap)        # overflow slot
+    x_rep = jnp.repeat(xg, k, axis=0) * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype)
+    buf = buf.at[slot].add(x_rep, mode="promise_in_bounds")
+    xe = buf[:e * cap].reshape(a, el * cap, d)   # dest-major expert slabs
+
+    recv = all_to_all(xe)                        # [A, el*cap, d]
+    xr = recv.reshape(a, el, cap, d).transpose(1, 0, 2, 3) \
+             .reshape(el, a * cap, d)            # per local expert, all srcs
+
+    act = activation_fn(cfg.activation)
+    wg = jax.lax.dynamic_slice_in_dim(p["w_gate"], me * el, el, axis=0)
+    wu = jax.lax.dynamic_slice_in_dim(p["w_up"], me * el, el, axis=0)
+    wd = jax.lax.dynamic_slice_in_dim(p["w_down"], me * el, el, axis=0)
+    h = act(jnp.einsum("etd,edf->etf", xr, wg)) \
+        * jnp.einsum("etd,edf->etf", xr, wu)
+    ye = jnp.einsum("etf,efd->etd", h, wd)
+
+    back = ye.reshape(el, a, cap, d).transpose(1, 0, 2, 3) \
+             .reshape(a, el * cap, d)
+    z = all_to_all(back)                         # [A, el*cap, d]
+    flat = jnp.concatenate([z.reshape(e * cap, d),
+                            jnp.zeros((1, d), dtype=z.dtype)], axis=0)
+    y_rep = jnp.take(flat, slot, axis=0)
+    y = (y_rep.reshape(t, k, d)
+         * weights[..., None].astype(x.dtype)).sum(axis=1)
+
+    if cfg.num_shared_experts:
+        gate = jax.nn.sigmoid((xg @ p["shared_gate"]).astype(jnp.float32))
+        y = y + mlp_forward(p["shared"], xg, cfg.activation) \
+            * gate.astype(x.dtype)
+
+    density = onehot.reshape(t, k, e).sum(axis=1) \
+                    .astype(jnp.float32).mean(axis=0)
+    router_prob = probs.mean(axis=0)
+    aux = e * jnp.sum(density * router_prob)
+    return y.reshape(b, s_len, d), aux

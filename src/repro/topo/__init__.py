@@ -6,7 +6,8 @@ from .spec import (  # noqa: F401
 from .zoo import (  # noqa: F401
     ZOO_SPECS,
     ring, bidir_ring, line, fully_connected, torus_2d, torus_3d,
-    hypercube, star_switch, two_cluster_switch, fig1a, fig1d_ring_unwound,
+    hypercube, star_switch, circulant, two_cluster_switch, fig1a,
+    fig1d_ring_unwound,
     fat_tree, dragonfly, dgx_box, bcube, mesh_of_dgx,
     fail_link, degrade_link,
 )

@@ -93,6 +93,27 @@ def hypercube(dim: int, cap: int = 1) -> DiGraph:
     return DiGraph(n, frozenset(range(n)), edges, f"hcube{dim}")
 
 
+@register_topology("circulant", pattern="n{n},s{lo}-{hi}")
+def circulant(n: int, lo: int = 1, hi: int = 4, cap: int = 1) -> DiGraph:
+    """Circulant direct-connect C_n(lo..hi): node i links to i ± s (mod n)
+    for every stride s in [lo, hi] — the symmetric direct-connect family
+    the all-to-all shuffle literature builds its schedules on.  Each stride
+    contributes one bidirectional ring, so the graph is vertex-transitive
+    and Eulerian.  When a stride satisfies 2s ≡ 0 (mod n) its two
+    directions coincide and the shared link accumulates double capacity."""
+    if not (1 <= lo <= hi < n):
+        raise ValueError(f"need 1 <= lo <= hi < n, got s{lo}-{hi} on n={n}")
+    edges: Dict[Edge, int] = {}
+    for i in range(n):
+        for s in range(lo, hi + 1):
+            j = (i + s) % n
+            if j == i:
+                continue
+            edges[(i, j)] = edges.get((i, j), 0) + cap
+            edges[(j, i)] = edges.get((j, i), 0) + cap
+    return DiGraph(n, frozenset(range(n)), edges, f"circulant{n}s{lo}-{hi}")
+
+
 @register_topology("torus3d", pattern="{x}x{y}x{z}")
 def torus_3d(x: int, y: int, z: int, cap: int = 1) -> DiGraph:
     n = x * y * z
@@ -346,6 +367,11 @@ ZOO_SPECS: Dict[str, str] = {
     "dragonfly": "dragonfly",
     "dgx8": "dgx:8",
     "star8": "star:8",
+    # direct-connect circulants from the all-to-all literature: every node
+    # reaches i±s for strides s in the range — dense enough that the
+    # per-source scatter trees stay shallow
+    "circulant8": "circulant:n8,s1-2",
+    "circulant16": "circulant:n16,s1-4",
     "two_cluster_3x6": "two_cluster:3,6,2",
     "multipod": "multipod:2x4",
     # scaled-up rows: the split/pack hot paths dominate even harder here

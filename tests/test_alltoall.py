@@ -1,0 +1,210 @@
+"""End-to-end tests for the alltoall subsystem: the §2.2/§2.3-shared
+compiler (`compile_alltoall`), the certified cut lower bound
+(`alltoall_lb`), family amortization byte-identity, cache round-trip and
+replay, the typed repair rejection at every entry point, the circulant
+zoo family, and the sweep row shape."""
+import json
+import tempfile
+from fractions import Fraction
+
+import pytest
+
+from repro.api import Collectives
+from repro.cache import ScheduleCache
+from repro.cache.serialize import (ensure_claimed, schedule_from_json,
+                                   schedule_to_json)
+from repro.core import (alltoall_lb, compile_alltoall, simulate_alltoall,
+                        verify_alltoall_delivery)
+from repro.core import plan as plan_mod
+from repro.core.repair import RepairError, repair_schedule
+from repro.topo import bidir_ring, fig1a, hypercube, ring
+from repro.topo.spec import TopologySpec
+from repro.topo.zoo import ZOO_SPECS, circulant
+
+
+def zoo_graph(name):
+    return TopologySpec.parse(ZOO_SPECS[name]).build()
+
+
+# ---------------------------------------------------------------------- #
+# compiler + simulator
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("topo_fn", [
+    lambda: ring(8), lambda: bidir_ring(8), lambda: fig1a(),
+    lambda: hypercube(3), lambda: zoo_graph("dgx8"),
+    lambda: zoo_graph("circulant8"),
+])
+def test_compile_verifies_and_beats_no_bound(topo_fn):
+    g = topo_fn()
+    sched = compile_alltoall(g, num_chunks=1)
+    assert sched.kind == "alltoall"
+    verify_alltoall_delivery(sched)
+    rep = simulate_alltoall(sched)
+    assert rep.kind == "alltoall"
+    assert rep.sim_time == ensure_claimed(sched), g.name
+    assert rep.sim_time >= rep.lb_time, g.name
+
+
+def test_ring8_achieves_byte_hop_optimum():
+    """Unidirectional ring: total byte-hops are M/8 * sum_{i!=j} d(i,j)
+    = 28M over 8 unit links, so T >= 7M/2 — and the per-source pruned
+    scatter meets it exactly (the cut bound itself is weaker: 2)."""
+    rep = simulate_alltoall(compile_alltoall(ring(8), num_chunks=1))
+    assert rep.sim_time == Fraction(7, 2)
+    assert rep.lb_time == 2
+
+
+def test_fig1a_achieves_cut_bound_exactly():
+    rep = simulate_alltoall(compile_alltoall(fig1a(), num_chunks=1))
+    assert rep.sim_time == rep.lb_time == Fraction(1, 2)
+
+
+def test_multi_chunk_pipelines_verify():
+    for p in (2, 4):
+        sched = compile_alltoall(bidir_ring(8), num_chunks=p)
+        assert sched.num_chunks == p
+        verify_alltoall_delivery(sched)
+
+
+def test_fixed_k_alltoall():
+    sched = compile_alltoall(bidir_ring(8), num_chunks=1, fixed_k=1)
+    verify_alltoall_delivery(sched)
+
+
+# ---------------------------------------------------------------------- #
+# lower bound: enumerated vs certified-family paths
+# ---------------------------------------------------------------------- #
+
+def test_alltoall_lb_exact_small():
+    # <= 16 nodes: exhaustive cut enumeration
+    assert alltoall_lb(ring(8)) == 2          # contiguous arc, egress 1
+    assert alltoall_lb(bidir_ring(8)) == 1    # m(N-m)/(N*2) at m=4
+    assert alltoall_lb(hypercube(3)) == Fraction(1, 2)
+
+
+def test_alltoall_lb_certified_large():
+    """20 > _A2A_ENUM_MAX_NODES: the certified family must still find the
+    bisection arc (a BFS ball) — m(N-m)/(N*B+) = 10*10/(20*2)."""
+    assert alltoall_lb(bidir_ring(20)) == Fraction(5, 2)
+
+
+# ---------------------------------------------------------------------- #
+# family amortization: stages 1-3 are kind-independent
+# ---------------------------------------------------------------------- #
+
+def test_family_alltoall_byte_identical_to_cold_compile():
+    g = fig1a()
+    fam = plan_mod.compile_family(
+        g, kinds=("allgather", "reduce_scatter", "alltoall"), num_chunks=4)
+    cold = compile_alltoall(g, num_chunks=4)
+    assert (schedule_to_json(fam["alltoall"])
+            == schedule_to_json(cold))
+
+
+# ---------------------------------------------------------------------- #
+# serialization + cache
+# ---------------------------------------------------------------------- #
+
+def test_serialization_round_trip_byte_stable():
+    sched = compile_alltoall(bidir_ring(8), num_chunks=2)
+    text = schedule_to_json(sched)
+    back = schedule_from_json(text)
+    assert back.kind == "alltoall"
+    assert back.claimed_runtime == sched.claimed_runtime
+    assert schedule_to_json(back) == text
+    payload = json.loads(text)
+    from repro.cache.fingerprint import FORMAT_VERSION
+    assert payload["version"] == FORMAT_VERSION
+
+
+def test_cache_replays_alltoall():
+    with tempfile.TemporaryDirectory() as d:
+        g = bidir_ring(8)
+        first = ScheduleCache(d).alltoall(g, num_chunks=1)
+        cache = ScheduleCache(d)
+        again = cache.alltoall(g, num_chunks=1)
+        assert cache.stats.hits == 1 and cache.stats.misses == 0
+        assert schedule_to_json(again) == schedule_to_json(first)
+
+
+def test_facade_schedule_and_program():
+    cc = Collectives(num_chunks=1)
+    sched = cc.schedule("bring:8", kind="alltoall")
+    assert sched.kind == "alltoall"
+    prog = cc.lower(sched)
+    assert prog.kind == "alltoall"
+    assert prog.axis_size == 8
+    assert prog.slots_per_shard == 8 * sched.opt.k * sched.num_chunks
+
+
+# ---------------------------------------------------------------------- #
+# repair: rejected with a typed error at every entry point
+# ---------------------------------------------------------------------- #
+
+def test_repair_schedule_rejects_alltoall():
+    sched = compile_alltoall(bidir_ring(8), num_chunks=1)
+    with pytest.raises(RepairError, match="alltoall"):
+        repair_schedule(sched, "@degrade(0-1,cap=1)")
+
+
+def test_facade_repair_rejects_alltoall_artifact_and_spec():
+    cc = Collectives(num_chunks=1)
+    sched = cc.schedule("bring:8", kind="alltoall")
+    with pytest.raises(RepairError, match="alltoall"):
+        cc.repair(sched, "@degrade(0-1,cap=1)")
+    with pytest.raises(RepairError, match="alltoall"):
+        cc.repair("bring:8", "@degrade(0-1,cap=1)", kind="alltoall")
+
+
+def test_hot_swap_rejects_axis_with_alltoall_program():
+    from repro.comms.mesh_axes import CollectiveContext
+    ctx = CollectiveContext({"x": 8}, num_chunks=2)
+    ctx.alltoall_program("x")
+    with pytest.raises(RepairError, match="alltoall"):
+        ctx.hot_swap("@degrade(0-1,cap=1)")
+
+
+# ---------------------------------------------------------------------- #
+# circulant zoo family
+# ---------------------------------------------------------------------- #
+
+def test_circulant_registered_and_wellformed():
+    for name in ("circulant8", "circulant16"):
+        g = zoo_graph(name)
+        assert g.num_compute == int(name[len("circulant"):])
+        # vertex-transitive direct-connect fabric: Eulerian by symmetry
+        for v in g.compute:
+            assert (sum(c for (a, b), c in g.cap.items() if a == v)
+                    == sum(c for (a, b), c in g.cap.items() if b == v))
+    g = circulant(8, 1, 2)
+    assert g.name == "circulant8s1-2"
+    assert len(g.cap) == 8 * 4          # strides 1,2 in both directions
+    with pytest.raises(ValueError):
+        circulant(8, 0, 2)
+    with pytest.raises(ValueError):
+        circulant(8, 3, 2)
+
+
+def test_circulant_stride_wraparound_accumulates_capacity():
+    # on n=4, stride 2 meets itself (2s = n): both directions pile onto
+    # the same physical link, so capacity doubles instead of duplicating
+    g = circulant(4, 2, 2)
+    assert g.cap[(0, 2)] == 2 and g.cap[(2, 0)] == 2
+
+
+# ---------------------------------------------------------------------- #
+# sweep row
+# ---------------------------------------------------------------------- #
+
+def test_sweep_emits_alltoall_row():
+    from repro.cache.sweep import ALLTOALL_CHUNKS, run_sweep
+    doc = run_sweep(names=["bring8"], num_chunks=4, jobs=1,
+                    collectives=["allgather", "alltoall"])
+    rows = [r for r in doc["entries"] if r["kind"] == "alltoall"]
+    assert len(rows) == 1
+    row = rows[0]
+    assert row["topology"] == "bring8"
+    assert row["num_chunks"] == ALLTOALL_CHUNKS
+    assert row["achieved_runtime"] == row["claimed_runtime"]
+    assert row["verified"] is True

@@ -28,7 +28,7 @@ def art_bytes(art):
 
 def test_compile_options_validation():
     with pytest.raises(ValueError):
-        CompileOptions(kind="alltoall")
+        CompileOptions(kind="gatherscatter")
     with pytest.raises(ValueError):
         CompileOptions(kind="broadcast", fixed_k=2)
     o = CompileOptions(kind="allgather", num_chunks=16)

@@ -122,6 +122,62 @@ def test_ring_buffer_cache_matches_full_cache():
 
 
 # ---------------------------------------------------------------------- #
+# MoE dispatch edge cases
+# ---------------------------------------------------------------------- #
+
+def _tiny_moe_cfg(**kw):
+    from repro.models.common import ModelConfig
+    return ModelConfig(name="tiny-moe", family="moe", num_layers=1,
+                       d_model=8, num_heads=2, num_kv_heads=2, d_ff=16,
+                       vocab_size=32, num_experts=4, num_experts_per_tok=2,
+                       moe_d_ff=16, num_shared_experts=0, **kw)
+
+
+def test_moe_capacity_overflow_drops_tokens():
+    """cap = ceil(8*2*0.1/4) = 1: identical tokens all route to the same
+    two experts, so only the first token wins a slot anywhere; every later
+    token hits pos >= cap, lands in the overflow slot, and must contribute
+    exactly zero."""
+    from repro.models.moe import init_moe, moe_forward
+    cfg = _tiny_moe_cfg(capacity_factor=0.1)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    one = jax.random.normal(jax.random.PRNGKey(1), (1, 1, cfg.d_model))
+    x = jnp.broadcast_to(one, (1, 8, cfg.d_model))
+    y, aux = moe_forward(p, cfg, x)
+    assert bool(jnp.any(y[0, 0] != 0))
+    np.testing.assert_array_equal(np.asarray(y[0, 1:]), 0.0)
+    assert bool(jnp.isfinite(aux))
+    # drop-free capacity on the same inputs: every (identical) token gets
+    # the same expert mix, and the kept token's output is unchanged
+    cfg_full = _tiny_moe_cfg(capacity_factor=16.0)
+    y_full, _ = moe_forward(p, cfg_full, x)
+    np.testing.assert_allclose(
+        np.asarray(y_full[0, 1:]),
+        np.broadcast_to(np.asarray(y_full[0, :1]), (7, cfg.d_model)),
+        atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_full[0, 0]),
+                               np.asarray(y[0, 0]), atol=1e-6)
+
+
+def test_moe_group_fallback_when_tokens_not_divisible():
+    """set_moe_groups(3) with 8 tokens: 8 % 3 != 0 must silently fall back
+    to one group and reproduce the ungrouped forward bit-for-bit."""
+    from repro.models import moe as moe_mod
+    cfg = _tiny_moe_cfg(capacity_factor=2.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, cfg.d_model))
+    base, aux_base = moe_mod.moe_forward(p, cfg, x)
+    try:
+        moe_mod.set_moe_groups(3)
+        assert moe_mod.get_moe_groups() == 3
+        y, aux = moe_mod.moe_forward(p, cfg, x)
+    finally:
+        moe_mod.set_moe_groups(1)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(aux), np.asarray(aux_base))
+
+
+# ---------------------------------------------------------------------- #
 # SSD property tests
 # ---------------------------------------------------------------------- #
 

@@ -59,6 +59,8 @@ def _random_eulerian(seed, n_compute=4, n_switch=1, max_cap=4):
      lambda g: ("broadcast", dict(num_chunks=8, root=0))),
     ("bring8.reduce.r0.p8.json", lambda: bidir_ring(8),
      lambda g: ("reduce", dict(num_chunks=8, root=0))),
+    ("fig1a.alltoall.p1.json", fig1a,
+     lambda g: ("alltoall", dict(num_chunks=1))),
 ])
 def test_golden_bytes_through_explicit_stages(fname, make, compiler):
     """Running the five stages by hand reproduces every checked-in golden
@@ -188,7 +190,7 @@ def test_family_fixed_k_matches_per_kind():
 
 def test_family_validates_kinds():
     with pytest.raises(PlanError, match="unknown collective kinds"):
-        compile_family(ring(4), kinds=("allgather", "alltoall"))
+        compile_family(ring(4), kinds=("allgather", "gatherscatter"))
 
 
 def test_family_timings_are_marginal():
@@ -309,7 +311,7 @@ def test_sweep_rows_carry_stage_timings(tmp_path):
     doc = run_sweep(names=("ring8",), jobs=1,
                     collectives=("allgather", "allreduce"),
                     out_path=str(tmp_path / "bench.json"))
-    assert doc["version"] == 6
+    assert doc["version"] == 7
     assert doc["fixed_k"] is None
     by_kind = {e["kind"]: e for e in doc["entries"]}
     for e in doc["entries"]:
@@ -344,8 +346,8 @@ def test_sweep_fixed_k_rows(tmp_path):
                     out_path=str(tmp_path / "bench_k1.json"))
     assert doc["fixed_k"] == 1
     assert list(doc["collectives"]) == ["allgather", "reduce_scatter",
-                                        "allreduce"]
-    assert doc["num_entries"] + len(doc["skipped"]) == 3 * len(SMOKE_NAMES)
+                                        "allreduce", "alltoall"]
+    assert doc["num_entries"] + len(doc["skipped"]) == 4 * len(SMOKE_NAMES)
     for e in doc["entries"]:
         assert e["fixed_k"] == 1
         assert e["k"] == 1

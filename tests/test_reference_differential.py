@@ -210,7 +210,8 @@ def assert_schedule_bytes_substrate_invariant(name, monkeypatch):
 
     def compile_pair():
         out = plan_mod.compile_family(g, kinds=("allgather",
-                                                "reduce_scatter"),
+                                                "reduce_scatter",
+                                                "alltoall"),
                                       num_chunks=4)
         return {k: schedule_to_json(a) for k, a in out.items()}
 

@@ -11,7 +11,8 @@ from repro.topo import (TopologySpec, TopologySpecError, TransformSpec,
                         bcube, bidir_ring, degrade_link, dgx_box, dragonfly,
                         fail_link, fat_tree, fig1a, hypercube, line,
                         mesh_of_dgx, multipod_topology, resolve_topology,
-                        ring, star_switch, topology_families, torus_2d,
+                        ring, star_switch, circulant, topology_families,
+                        torus_2d,
                         two_cluster_switch, zoo_specs)
 
 # ---------------------------------------------------------------------- #
@@ -42,6 +43,8 @@ LEGACY_REGISTRY = {
     "dragonfly": dragonfly,
     "dgx8": dgx_box,
     "star8": lambda: star_switch(8),
+    "circulant8": lambda: circulant(8, 1, 2),
+    "circulant16": lambda: circulant(16, 1, 4),
     "two_cluster_3x6": lambda: two_cluster_switch(3, 6, 2),
     "multipod": lambda: multipod_topology(2, 4, 10, 1),
     "torus8x8": lambda: torus_2d(8, 8),
